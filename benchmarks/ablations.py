@@ -1,0 +1,78 @@
+"""Ablations beyond the paper's figures.
+
+* PFIT sparsity sweep — reward / upload bytes vs head-sparsity ∈ {0, .2, .4, .6}
+  (the paper only reports 20 % and 40 %); exposes the personalization-vs-
+  communication trade-off the paper discusses in §VI-2/3.
+* PFTT capacity sweep — accuracy vs (adapter_dim, lora_rank); shows the
+  adapters-global/LoRA-local split is robust across budgets.
+* PFTT SNR sweep — accuracy vs mean uplink SNR ∈ {0, 5, 10} dB (outage rate
+  falls with SNR; accuracy tracks it).
+
+    PYTHONPATH=src python -m benchmarks.ablations [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core.pfit import PFITConfig, run_pfit
+from repro.core.pftt import PFTTConfig, run_pftt
+
+
+def pfit_sparsity_sweep(rounds=8, quick=True):
+    rows = []
+    for sp in (0.0, 0.2, 0.4, 0.6):
+        r = run_pfit(PFITConfig(method="pfit", sparsity=sp, rounds=rounds,
+                                pretrain_steps=120 if quick else 250,
+                                rm_steps=120 if quick else 250))
+        rows.append({"sparsity": sp, "reward": r["final_reward"],
+                     "bytes": r["mean_round_bytes"]})
+        print(f"ablation pfit sparsity={sp:.1f} reward={r['final_reward']:.4f} "
+              f"bytes/rnd={r['mean_round_bytes']:,.0f}")
+    return rows
+
+
+def pftt_capacity_sweep(rounds=10, quick=True):
+    rows = []
+    for ad, lr_ in ((4, 4), (8, 8), (16, 16)):
+        r = run_pftt(PFTTConfig(method="pftt", adapter_dim=ad, lora_rank=lr_,
+                                rounds=rounds,
+                                pretrain_steps=120 if quick else 250))
+        rows.append({"adapter_dim": ad, "lora_rank": lr_,
+                     "acc": r["final_acc"], "bytes": r["mean_round_bytes"]})
+        print(f"ablation pftt adapter={ad} rank={lr_} acc={r['final_acc']:.3f} "
+              f"bytes/rnd={r['mean_round_bytes']:,.0f}")
+    return rows
+
+
+def pftt_snr_sweep(rounds=10, quick=True):
+    rows = []
+    for snr in (0.0, 5.0, 10.0):
+        r = run_pftt(PFTTConfig(method="pftt", snr_db=snr, rounds=rounds,
+                                pretrain_steps=120 if quick else 250))
+        rows.append({"snr_db": snr, "acc": r["final_acc"],
+                     "delay_s": r["mean_round_delay_s"]})
+        print(f"ablation pftt snr={snr:.0f}dB acc={r['final_acc']:.3f} "
+              f"delay/rnd={r['mean_round_delay_s']:.4f}s")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--out", default="experiments/ablations.json")
+    args, _ = ap.parse_known_args()
+    res = {
+        "pfit_sparsity": pfit_sparsity_sweep(quick=args.quick),
+        "pftt_capacity": pftt_capacity_sweep(quick=args.quick),
+        "pftt_snr": pftt_snr_sweep(quick=args.quick),
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Fig. 4: PFIT vs SFL / PFL / Shepherd — reward curve (left) and
+per-round communication cost (right)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.pfit import PFITConfig, run_pfit
+
+
+def main(rounds: int = 20, quick: bool = False, out: str = None):
+    if quick:
+        rounds = 4
+    results = {}
+    for method in ("pfit", "sfl", "pfl", "shepherd"):
+        cfg = PFITConfig(method=method, rounds=rounds,
+                         pretrain_steps=120 if quick else 250,
+                         rm_steps=120 if quick else 250)
+        results[method] = run_pfit(cfg)
+        r = results[method]
+        print(f"fig4 {method:10s} reward={r['final_reward']:.4f} "
+              f"bytes/round={r['mean_round_bytes']:,.0f}")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Kernel microbench: wall time of each Pallas kernel (interpret mode on
+this CPU container — structural check + oracle comparison; real timings
+come from a TPU run) and its jnp lowering path.  Emits
+``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SparseAttnConfig
+
+
+def _time(fn, *args, n=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 512, 8, 64))
+    k = jax.random.normal(ks[1], (2, 512, 4, 64))
+    v = jax.random.normal(ks[2], (2, 512, 4, 64))
+
+    from repro.models.attention import (block_sparse_attention as sparse_jnp,
+                                        chunked_attention, dense_attention)
+    rows.append(("attn_dense_jnp", _time(jax.jit(
+        lambda a, b, c: dense_attention(a, b, c)), q, k, v), "B2 S512 H8 d64"))
+    rows.append(("attn_chunked_jnp", _time(jax.jit(
+        lambda a, b, c: chunked_attention(a, b, c, q_block=128,
+                                          kv_block=128)), q, k, v),
+        "flash-style scan"))
+    scfg = SparseAttnConfig(block_size=64, local_blocks=2, sink_blocks=1,
+                            stride=4)
+    rows.append(("attn_block_sparse_jnp", _time(jax.jit(
+        lambda a, b, c: sparse_jnp(a, b, c, scfg)), q, k, v),
+        "paper technique, gather-based"))
+
+    from repro.kernels.flash_attn.ops import flash_attention
+    rows.append(("flash_attn_pallas_interpret", _time(
+        lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128), q, k, v),
+        "interpret=True"))
+    from repro.kernels.block_sparse_attn.ops import block_sparse_attention
+    rows.append(("block_sparse_pallas_interpret", _time(
+        lambda a, b, c: block_sparse_attention(a, b, c, scfg), q, k, v),
+        "interpret=True"))
+
+    from repro.kernels.ssd_chunk.ops import ssd_scan
+    from repro.models.ssm import ssd_chunk_scan
+    kss = jax.random.split(jax.random.PRNGKey(1), 5)
+    B, S, H, P, N = 2, 512, 8, 64, 32
+    x = jax.random.normal(kss[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(kss[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(kss[2], (H,)) * 0.3)
+    bm = jax.random.normal(kss[3], (B, S, H, N)) * 0.5
+    cm = jax.random.normal(kss[4], (B, S, H, N)) * 0.5
+    rows.append(("ssd_chunk_jnp", _time(jax.jit(
+        lambda *t: ssd_chunk_scan(*t, 128)), x, dt, a, bm, cm),
+        "matmul-form chunked"))
+    rows.append(("ssd_chunk_pallas_interpret", _time(
+        lambda *t: ssd_scan(*t, chunk=128), x, dt, a, bm, cm),
+        "interpret=True"))
+
+    from repro.kernels.lora_fused.ops import lora_matmul
+    from repro.kernels.lora_fused.ref import lora_ref
+    kl = jax.random.split(jax.random.PRNGKey(2), 4)
+    xm = jax.random.normal(kl[0], (512, 512))
+    w = jax.random.normal(kl[1], (512, 512)) * 0.05
+    am = jax.random.normal(kl[2], (512, 16)) * 0.05
+    bm2 = jax.random.normal(kl[3], (16, 512)) * 0.05
+    rows.append(("lora_two_matmul_jnp", _time(jax.jit(
+        lambda *t: lora_ref(*t, scale=2.0)), xm, w, am, bm2), "unfused"))
+    rows.append(("lora_fused_pallas_interpret", _time(
+        lambda *t: lora_matmul(*t, scale=2.0), xm, w, am, bm2),
+        "interpret=True"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

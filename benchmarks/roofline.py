@@ -1,0 +1,43 @@
+"""Roofline summary: reads the dry-run artifacts (experiments/dryrun/*.json)
+and prints the per-(arch × shape × mesh) three-term roofline table used in
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_ms(s):
+    return f"{1e3 * s:9.2f}"
+
+
+def main(out_dir: str = "experiments/dryrun", mesh: str = None):
+    rows = load(out_dir)
+    if not rows:
+        print(f"no dry-run artifacts in {out_dir} — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    rows = [r for r in rows if mesh is None or r["mesh"] == mesh]
+    print("arch,shape,mesh,step,compute_ms,memory_ms,collective_ms,"
+          "dominant,useful_flops_ratio")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        ro = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['step']},"
+              f"{1e3*ro['compute_s']:.3f},{1e3*ro['memory_s']:.3f},"
+              f"{1e3*ro['collective_s']:.3f},{ro['dominant']},"
+              f"{ratio if ratio is None else round(ratio, 3)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

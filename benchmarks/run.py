@@ -1,0 +1,55 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the quick profile (CI-friendly); ``--full`` (or env FULL=1) runs
+the paper's 40-round simulations.  Prints ``name,us_per_call,derived`` CSV
+blocks plus the per-figure summaries.
+"""
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    default=bool(os.environ.get("FULL")))
+    ap.add_argument("--only", default=None,
+                    choices=[None, "table1", "fig4", "fig5", "kernels",
+                             "roofline"])
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    t0 = time.time()
+    if args.only in (None, "table1"):
+        print("# === Table I: learning-stage parameter/communication fractions ===")
+        from benchmarks import table1_stages
+        table1_stages.main()
+
+    if args.only in (None, "kernels"):
+        print("\n# === kernel microbench (interpret mode; CSV: name,us_per_call,derived) ===")
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+
+    if args.only in (None, "fig5"):
+        print("\n# === Fig. 5: PFTT accuracy / communication ===")
+        from benchmarks import fig5_pftt
+        fig5_pftt.main(quick=quick, out="experiments/fig5_pftt.json")
+
+    if args.only in (None, "fig4"):
+        print("\n# === Fig. 4: PFIT reward / communication ===")
+        from benchmarks import fig4_pfit
+        fig4_pfit.main(quick=quick, out="experiments/fig4_pfit.json")
+
+    if args.only in (None, "roofline"):
+        print("\n# === Roofline (from dry-run artifacts) ===")
+        from benchmarks import roofline
+        roofline.main()
+
+    print(f"\n# total {time.time()-t0:.0f}s (quick={quick})")
+
+
+if __name__ == "__main__":
+    main()

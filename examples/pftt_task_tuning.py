@@ -1,0 +1,33 @@
+"""PFTT end-to-end driver (paper §IV-D + Fig. 5): 4 clients, Dirichlet
+non-IID AG-News-like data, RoBERTa backbone, universal adapters aggregated
+over a Rayleigh uplink, local LoRA personalization.
+
+    PYTHONPATH=src python examples/pftt_task_tuning.py --method pftt --rounds 40
+"""
+import argparse
+import json
+
+from repro.core.pftt import METHODS, PFTTConfig, run_pftt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="pftt", choices=METHODS)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--snr-db", type=float, default=5.0)
+    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    res = run_pftt(PFTTConfig(
+        method=args.method, rounds=args.rounds, n_clients=args.clients,
+        snr_db=args.snr_db, local_steps=args.local_steps, seed=args.seed,
+        verbose=True))
+    print(json.dumps({k: v for k, v in res.items()
+                      if k != "acc_per_round"}, indent=2))
+    print("accuracy curve:", [round(a, 3) for a in res["acc_per_round"]])
+
+
+if __name__ == "__main__":
+    main()

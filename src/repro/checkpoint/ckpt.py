@@ -1,0 +1,45 @@
+"""Flat-key .npz checkpointing for arbitrary pytrees (no orbax offline).
+
+Leaves are stored under their '/'-joined tree paths; restore requires a
+template pytree with the same structure (shape/dtype verified).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import trees
+
+
+def save_checkpoint(path: str, tree) -> None:
+    flat = trees.flatten(tree)
+    arrays = {}
+    for k, v in flat.items():
+        if v is None:
+            continue
+        a = np.asarray(v)
+        if a.dtype == jnp.bfloat16:  # npz can't serialize ml_dtypes
+            a = a.astype(np.float32)
+        arrays[k] = a
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_checkpoint(path: str, template):
+    """Restore into the structure of ``template``."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def get(p, v):
+        if v is None:
+            return None
+        if p not in data:
+            raise KeyError(f"checkpoint missing leaf {p}")
+        arr = data[p]
+        if tuple(arr.shape) != tuple(v.shape):
+            raise ValueError(f"shape mismatch at {p}: {arr.shape} vs {v.shape}")
+        return jnp.asarray(arr, dtype=v.dtype)
+
+    return trees.map_with_path(get, template)

@@ -1,0 +1,4 @@
+from repro.core.aggregation import fedavg, partial_fedavg, masked_fedavg  # noqa: F401
+from repro.core.rewards import ClientPreference, DoubleReward  # noqa: F401
+from repro.core.pftt import PFTTConfig, run_pftt  # noqa: F401
+from repro.core.pfit import PFITConfig, run_pfit  # noqa: F401

@@ -1,0 +1,70 @@
+"""Federated aggregation operators.
+
+* ``fedavg``          — weighted mean of full client trees.
+* ``partial_fedavg``  — the paper's PFTT aggregation: only leaves selected by
+  a path predicate (the universal adapters) are averaged; everything else
+  keeps the global value (local LoRA is never uploaded).
+* ``masked_fedavg``   — PFIT's sparse-layer aggregation: elementwise masks
+  (last-2-layers × head-sparsity × channel outage) weight each client's
+  contribution; where no client contributes, the global value is kept.
+
+On a TPU deployment these are ``psum``s over the ("pod","data") axes — see
+``launch/steps.py::make_fl_round_step`` for the collective formulation proven by the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import trees
+
+
+def fedavg(client_trees: Sequence, weights: Optional[Sequence[float]] = None):
+    n = len(client_trees)
+    if weights is None:
+        weights = [1.0 / n] * n
+    w = np.asarray(weights, np.float32)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        out = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            out = out + leaf.astype(jnp.float32) * wi
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(avg, *client_trees)
+
+
+def partial_fedavg(global_tree, client_trees: Sequence,
+                   pred: Callable[[str], bool],
+                   weights: Optional[Sequence[float]] = None):
+    """Aggregate only leaves whose path satisfies ``pred``; others keep the
+    global value."""
+    avg = fedavg(client_trees, weights)
+    flat_avg = trees.flatten(avg)
+
+    def pick(path, g):
+        return flat_avg[path] if (pred(path) and path in flat_avg) else g
+
+    return trees.map_with_path(pick, global_tree)
+
+
+def masked_fedavg(global_tree, client_trees: Sequence, masks: Sequence):
+    """Elementwise: θ_g ← Σ_i m_i·θ_i / Σ_i m_i, keeping θ_g where Σm = 0.
+    ``masks`` are 1/0 float trees (broadcastable to leaves)."""
+    def agg(g, *pairs):
+        half = len(pairs) // 2
+        thetas, ms = pairs[:half], pairs[half:]
+        num = jnp.zeros(g.shape, jnp.float32)
+        den = jnp.zeros(g.shape, jnp.float32)
+        for t, m in zip(thetas, ms):
+            mm = jnp.broadcast_to(m.astype(jnp.float32), g.shape)
+            num = num + mm * t.astype(jnp.float32)
+            den = den + mm
+        avg = num / jnp.maximum(den, 1.0)
+        return jnp.where(den > 0, avg, g.astype(jnp.float32)).astype(g.dtype)
+
+    return jax.tree_util.tree_map(agg, global_tree, *client_trees, *masks)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    InstructionCorpus, ClassificationCorpus, VOCAB, SPECIAL,
+)
+from repro.data.partition import dirichlet_partition  # noqa: F401
+from repro.data.pipeline import batch_iterator  # noqa: F401

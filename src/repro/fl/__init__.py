@@ -1,0 +1,3 @@
+from repro.fl.client import FLClient  # noqa: F401
+from repro.fl.server import FLServer  # noqa: F401
+from repro.fl.rounds import run_rounds  # noqa: F401

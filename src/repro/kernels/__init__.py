@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package has:
+* ``kernel.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+* ``ops.py``    — jit'd public wrapper (layout handling, GQA broadcast, ...)
+* ``ref.py``    — pure-jnp oracle used by the allclose sweep tests
+
+On this CPU container kernels are validated with ``interpret=True``; the
+model code lowers through the jnp paths (``repro.models.attention`` etc.),
+with the ops-level ``use_pallas`` flag selecting the kernels on real TPU.
+"""

@@ -1,0 +1,31 @@
+"""Oracle: dense attention restricted to the static block-sparse mask."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def block_sparse_ref(q, k, v, idx, valid, *, block: int):
+    """Same contract as the kernel; mask materialized densely."""
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    group = bh // bkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    nq, nk = sq // block, sk // block
+    mask = np.zeros((sq, sk), bool)
+    idx = np.asarray(idx)
+    valid = np.asarray(valid)
+    for i in range(nq):
+        for a in range(idx.shape[1]):
+            if valid[i, a]:
+                j = int(idx[i, a])
+                mask[i * block:(i + 1) * block,
+                     j * block:(j + 1) * block] = True
+    mask &= np.tril(np.ones((sq, sk), bool))
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    s = jnp.where(jnp.asarray(mask)[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

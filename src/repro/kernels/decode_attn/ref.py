@@ -1,0 +1,22 @@
+"""Oracle: masked single-token attention."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k_cache, v_cache, pos, *, window: int = 0):
+    bh, _, d = q.shape
+    bkv, sc, _ = k_cache.shape
+    group = bh // bkv
+    k = jnp.repeat(k_cache, group, axis=0)
+    v = jnp.repeat(v_cache, group, axis=0)
+    s = jnp.einsum("bqd,btd->bqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    kpos = jnp.arange(sc)
+    mask = kpos <= pos
+    if window > 0:
+        mask &= kpos > pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqt,btd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,72 @@
+"""Fused LoRA matmul Pallas kernel: y = x·W + (α/r)·(x·A)·B in one pass.
+
+PFTT serves *unmerged* personalized models (base W stays shared across
+clients; each client's LoRA is tiny).  Fusing the low-rank path into the
+base GEMM avoids a second read of x from HBM and keeps the (bm × r)
+intermediate in VMEM — the arithmetic intensity of the LoRA path alone is
+far below the TPU ridge point, so unfused it is pure memory traffic.
+
+Grid: (M/bm, N/bn, K/bk); accumulators for both the base tile and the x·A
+tile live in VMEM scratch across the K iteration; the rank-r correction is
+applied on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
+            scale: float, n_k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jax.lax.dot(x, w_ref[...],
+                                preferred_element_type=jnp.float32)
+    xa_ref[...] += jax.lax.dot(x, a_ref[...],
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_k - 1)
+    def _finalize():
+        lora = jax.lax.dot(xa_ref[...].astype(b_ref.dtype), b_ref[...],
+                           preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * lora).astype(o_ref.dtype)
+
+
+def lora_fused_kernel(x, w, a, b, *, scale: float, bm: int = 128,
+                      bn: int = 128, bk: int = 128, interpret: bool = True):
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N) → (M, N)."""
+    m, k = x.shape
+    _, n = w.shape
+    r = a.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nm, nn, nk = m // bm, n // bn, k // bk
+
+    kernel = functools.partial(_kernel, scale=scale, n_k=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, r), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a, b)

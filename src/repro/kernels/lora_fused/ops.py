@@ -1,0 +1,18 @@
+"""Public wrapper for the fused LoRA projection (PFTT serving hot path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lora_fused.kernel import lora_fused_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def lora_matmul(x, w, a, b, *, scale: float, interpret: bool = True):
+    """x: (..., K) @ [W (K,N) + scale·A(K,r)·B(r,N)] → (..., N)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xf = x.reshape(-1, k)
+    out = lora_fused_kernel(xf, w, a, b, scale=scale, interpret=interpret)
+    return out.reshape(*lead, w.shape[1])

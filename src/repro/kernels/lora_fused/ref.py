@@ -1,0 +1,8 @@
+"""Oracle: two-matmul LoRA."""
+import jax.numpy as jnp
+
+
+def lora_ref(x, w, a, b, *, scale: float):
+    base = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    lora = (x.astype(jnp.float32) @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return (base + scale * lora).astype(x.dtype)

@@ -1,0 +1,22 @@
+"""Oracle for the SSD chunk kernel: naive O(S·N·P) recurrent scan."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a_coef, bmat, cmat):
+    """x: (BH, S, P); dt: (BH, S); a_coef: (BH,); b/c: (BH, S, N)
+    → (y, h_final) computed token-by-token."""
+    def per_seq(x1, dt1, a1, b1, c1):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(dtt * a1) * h + dtt * jnp.outer(xt, bt)   # (P, N)
+            y = h @ ct
+            return h, y
+        h0 = jnp.zeros((x1.shape[-1], b1.shape[-1]), jnp.float32)
+        h, y = jax.lax.scan(step, h0, (x1.astype(jnp.float32),
+                                       dt1.astype(jnp.float32),
+                                       b1.astype(jnp.float32),
+                                       c1.astype(jnp.float32)))
+        return y, h
+    y, h = jax.vmap(per_seq)(x, dt, a_coef, bmat, cmat)
+    return y.astype(x.dtype), h

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips/pod.  Single-pod mesh is (16 data × 16 model);
+multi-pod adds a leading pod axis (2 × 16 × 16 = 512 chips).  Defined as
+functions so importing this module never touches jax device state — only
+``launch/dryrun.py`` (which sets the host-device-count flag first) or a real
+TPU launcher should call these.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding import MeshCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "did you set --xla_force_host_platform_device_count?")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_meshctx(*, multi_pod: bool = False) -> MeshCtx:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return MeshCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model")
+
+
+# Hardware constants for the roofline model (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,75 @@
+"""Serving launcher: prefill + batched KV-cached decode, optionally with a
+per-client LoRA (PFTT personalized serving).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_configs
+from repro.models import Model
+from repro.models import peft as peft_mod
+from repro.sharding import MeshCtx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_configs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--lora-rank", type=int, default=0,
+                    help="serve with a random personalized LoRA (PFTT mode)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.is_encoder_only:
+        raise SystemExit("encoder-only architectures have no decode path")
+    model = Model(cfg, meshctx=MeshCtx.single_device())
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, max_seq=args.prompt_len + args.gen)
+    if args.lora_rank:
+        pc = peft_mod.PEFTConfig(lora_rank=args.lora_rank)
+        lora = peft_mod.init_lora(key, params, pc)
+        params = peft_mod.merge_lora(params, lora, pc)
+        print(f"serving with merged client LoRA (rank {args.lora_rank})")
+
+    rng = np.random.RandomState(0)
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["frames"] = jnp.asarray(rng.randn(args.batch, cfg.encoder_seq,
+                                             cfg.d_model), jnp.float32)
+    if cfg.n_prefix_tokens:
+        kw["patches"] = jnp.asarray(rng.randn(args.batch, cfg.n_prefix_tokens,
+                                              cfg.prefix_dim), jnp.float32)
+    prompts = jnp.asarray(rng.randint(6, cfg.vocab_size,
+                                      size=(args.batch, args.prompt_len)))
+
+    decode = jax.jit(model.decode_step)
+    t0 = time.time()
+    logits, cache = model.prefill(params, prompts,
+                                  cache_len=args.prompt_len + args.gen, **kw)
+    print(f"prefill: {time.time()-t0:.2f}s "
+          f"({args.batch}×{args.prompt_len} tokens)")
+    t0 = time.time()
+    out = []
+    for _ in range(args.gen):
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(nxt[:, 0]))
+        logits, cache = decode(params, cache, nxt)
+    dt = time.time() - t0
+    print(f"decode: {args.gen} steps in {dt:.2f}s "
+          f"→ {args.batch*args.gen/dt:.1f} tok/s")
+    print("sample:", np.stack(out, 1)[0][:16])
+
+
+if __name__ == "__main__":
+    main()

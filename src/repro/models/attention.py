@@ -1,0 +1,500 @@
+"""Attention cores.
+
+Four execution paths, all GQA-aware (q: (B,S,H,hd); k/v: (B,Sk,K,hd), H=K*G):
+
+* ``dense_attention``   — masked softmax einsum; short sequences & oracles.
+* ``chunked_attention`` — flash-style: scan over q blocks, inner scan over kv
+  blocks with a running (max, denom, acc).  O(block) memory, used for long
+  training/prefill sequences.  ``causal_skip`` optionally skips kv blocks
+  entirely above the diagonal (HLO-FLOP reduction — see EXPERIMENTS.md §Perf).
+* ``block_sparse_attention`` — the paper's sparse-attention device adapted to
+  TPU: a *static* block pattern (sink blocks + local band + strided global
+  blocks).  Implemented gather-style: each q block gathers only its active kv
+  blocks, so compiled FLOPs are sub-quadratic (O(S · A · block)), not merely
+  masked.
+* ``decode_attention``  — one query token against a (possibly ring-buffered)
+  KV cache with position/window/sparse masking.
+
+The Pallas TPU kernels in ``repro.kernels`` implement the same contracts; the
+functions here are the jnp lowering path (CPU dry-run) and the oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SparseAttnConfig
+
+NEG_INF = -1e30
+
+
+def _split_gqa(q, n_kv):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+def make_mask(sq: int, sk: int, *, causal: bool, window: int = 0,
+              q_offset=0):
+    """(sq, sk) boolean 'allowed' mask.  q_offset may be traced."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    allowed = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        allowed &= kpos <= qpos
+    if window > 0:
+        allowed &= kpos > qpos - window
+    return allowed
+
+
+def dense_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, mask=None):
+    b, sq, h, d = q.shape
+    n_kv = k.shape[2]
+    qg = _split_gqa(q, n_kv) * (d ** -0.5)
+    logits = jnp.einsum("bsKgd,btKd->bKgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    if mask is None:
+        mask = make_mask(sq, k.shape[1], causal=causal, window=window,
+                         q_offset=q_offset)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bKgst,btKd->bsKgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_offset=0, q_block: int = 512, kv_block: int = 1024,
+                      causal_skip: bool = False):
+    """Flash-style attention: outer scan over q blocks, inner scan over kv
+    blocks, online softmax.  ``causal_skip`` computes, for each q block, only
+    the kv blocks at or below the diagonal (saves ~2x FLOPs for causal)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_kv = k.shape[2]
+    dv = v.shape[-1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, q_block, sk, kv_block)
+    nq, nk = sq // q_block, sk // kv_block
+    g = h // n_kv
+
+    qg = _split_gqa(q, n_kv).astype(jnp.float32) * (d ** -0.5)
+    qb = qg.reshape(b, nq, q_block, n_kv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.astype(jnp.float32).reshape(b, nk, kv_block, n_kv, d)
+    vb = v.astype(jnp.float32).reshape(b, nk, kv_block, n_kv, dv)
+
+    kpos_all = jnp.arange(sk).reshape(nk, kv_block)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q  # qblk: (b, K, g, q_block, d)
+        qpos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kj_kv):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_kv
+            logits = jnp.einsum("bKgqd,bkKd->bKgqk", qblk, kblk)
+            kpos = kpos_all[kj]
+            allowed = jnp.ones((q_block, kv_block), dtype=bool)
+            if causal:
+                allowed &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                allowed &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(allowed[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bKgqk,bkKd->bKgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, n_kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, q_block, dv), jnp.float32)
+
+        if causal_skip and causal and q_offset is not None and isinstance(q_offset, int):
+            # only kv blocks whose start is <= last q position of this block
+            # (static bound per q block via mask over a dynamic slice length is
+            # not possible with scan; instead use fori_loop with traced bound)
+            n_needed = (q_offset + (qi + 1) * q_block + kv_block - 1) // kv_block
+            n_needed = jnp.minimum(n_needed, nk)
+
+            def body(j, carry):
+                out, _ = kv_step(carry, (j, kb[:, j], vb[:, j]))
+                return out
+
+            m, l, acc = jax.lax.fori_loop(0, n_needed, body, (m0, l0, a0))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (jnp.arange(nk), kb.transpose(1, 0, 2, 3, 4),
+                 vb.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out
+
+    _, yb = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    # yb: (nq, b, K, g, q_block, dv) → (b, sq, h, dv)
+    y = yb.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
+    return y.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse (the paper's technique)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def sparse_block_table(n_q_blocks: int, n_kv_blocks: int,
+                       cfg: SparseAttnConfig, q_block_offset: int = 0):
+    """Static (numpy) table of active kv-block indices per q block.
+
+    Active set for absolute q block ``qi``: sink blocks [0, sink), local band
+    (qi-local, qi], and strided global blocks {j : j % stride == 0, j < qi}.
+    Returns (idx, valid): both (n_q_blocks, A)."""
+    a_max = cfg.sink_blocks + cfg.local_blocks + int(np.ceil(n_kv_blocks / cfg.stride))
+    idx = np.zeros((n_q_blocks, a_max), dtype=np.int32)
+    valid = np.zeros((n_q_blocks, a_max), dtype=bool)
+    for i in range(n_q_blocks):
+        qi = i + q_block_offset
+        active = set(range(min(cfg.sink_blocks, n_kv_blocks)))
+        lo = max(0, qi - cfg.local_blocks + 1)
+        active |= set(range(lo, min(qi + 1, n_kv_blocks)))
+        active |= {j for j in range(0, min(qi + 1, n_kv_blocks), cfg.stride)}
+        active = sorted(active)[:a_max]
+        idx[i, : len(active)] = active
+        valid[i, : len(active)] = True
+    return idx, valid
+
+
+def block_sparse_attention(q, k, v, cfg: SparseAttnConfig, *, q_offset: int = 0):
+    """Causal block-sparse attention.  Gathers only active kv blocks per q
+    block → compiled FLOPs are O(S·A·block), sub-quadratic."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_kv = k.shape[2]
+    g = h // n_kv
+    bs = cfg.block_size
+    assert sq % bs == 0 and sk % bs == 0, (sq, sk, bs)
+    nq, nk = sq // bs, sk // bs
+    idx_np, valid_np = sparse_block_table(nq, nk, cfg, q_offset // bs)
+    idx = jnp.asarray(idx_np)
+    valid = jnp.asarray(valid_np)
+    a = idx.shape[1]
+
+    qg = _split_gqa(q, n_kv).astype(jnp.float32) * (d ** -0.5)
+    qb = qg.reshape(b, nq, bs, n_kv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.astype(jnp.float32).reshape(b, nk, bs, n_kv, d)
+    vb = v.astype(jnp.float32).reshape(b, nk, bs, n_kv, d)
+
+    def q_step(_, inputs):
+        qi, qblk, blk_idx, blk_valid = inputs
+        # gather active kv blocks: (b, A, bs, K, d)
+        kg = jnp.take(kb, blk_idx, axis=1)
+        vg = jnp.take(vb, blk_idx, axis=1)
+        logits = jnp.einsum("bKgqd,bakKd->bKgqak", qblk, kg)
+        qpos = q_offset + qi * bs + jnp.arange(bs)
+        kpos = blk_idx[:, None] * bs + jnp.arange(bs)[None, :]
+        allowed = (kpos[None] <= qpos[:, None, None]) & blk_valid[None, :, None]
+        logits = jnp.where(allowed[None, None, None], logits, NEG_INF)
+        flat = logits.reshape(*logits.shape[:-2], a * bs)
+        probs = jax.nn.softmax(flat, axis=-1).reshape(logits.shape)
+        out = jnp.einsum("bKgqak,bakKd->bKgqd", probs, vg)
+        return None, out
+
+    _, yb = jax.lax.scan(q_step, None, (jnp.arange(nq), qb, idx, valid))
+    y = yb.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
+    return y.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single query vs cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     sparse: Optional[SparseAttnConfig] = None,
+                     ring: bool = False):
+    """q: (B,1,H,hd); caches: (B,Sc,K,hd); cache_len: traced scalar = number
+    of valid positions INCLUDING the token just written.
+
+    ``ring=True`` means the cache is a ring buffer of size Sc (window cache):
+    all slots < min(cache_len, Sc) are valid and in-window by construction.
+    ``sparse`` applies the static block pattern as a position mask (the
+    gather-based saving at decode is a §Perf optimization)."""
+    b, _, h, d = q.shape
+    sc = k_cache.shape[1]
+    n_kv = k_cache.shape[2]
+    g = h // n_kv
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32) * (d ** -0.5)
+    logits = jnp.einsum("bKgd,btKd->bKgt", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(sc)
+    if ring:
+        allowed = pos < jnp.minimum(cache_len, sc)
+    else:
+        allowed = pos < cache_len
+        if window > 0:
+            allowed &= pos > cache_len - 1 - window
+        if sparse is not None:
+            bs = sparse.block_size
+            blk = pos // bs
+            qblk = (cache_len - 1) // bs
+            a = (blk < sparse.sink_blocks)
+            a |= blk > qblk - sparse.local_blocks
+            a |= (blk % sparse.stride) == 0
+            allowed &= a
+    logits = jnp.where(allowed[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bKgt,btKd->bKgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal block-skip chunked attention (§Perf optimization A)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention_pairs(q, k, v, *, causal: bool = True, window: int = 0,
+                            q_offset: int = 0, q_block: int = 512,
+                            kv_block: int = 512):
+    """Flash-style attention that enumerates only the (q-block, kv-block)
+    pairs at or below the causal diagonal (and inside the window), as a
+    single static scan over valid pairs.
+
+    vs ``chunked_attention`` (which scans ALL kv blocks and masks): compiled
+    FLOPs drop from nq·nk to nq(nq+1)/2 block-GEMMs (~2× for causal), the
+    structure stays a static scan (differentiable, and trip counts remain
+    visible to jaxpr cost analysis).  This is the beyond-paper optimization
+    recorded in EXPERIMENTS.md §Perf."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_kv = k.shape[2]
+    dv = v.shape[-1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0
+    nq, nk = sq // q_block, sk // kv_block
+    g = h // n_kv
+
+    pairs = []
+    for i in range(nq):
+        hi = (q_offset + (i + 1) * q_block - 1) // kv_block if causal else nk - 1
+        hi = min(hi, nk - 1)
+        lo = 0
+        if window > 0:
+            lo = max(0, (q_offset + i * q_block - window) // kv_block)
+        for j in range(lo, hi + 1):
+            pairs.append((i, j))
+    pi = jnp.asarray(np.array([p[0] for p in pairs], np.int32))
+    pj = jnp.asarray(np.array([p[1] for p in pairs], np.int32))
+
+    qg = _split_gqa(q, n_kv).astype(jnp.float32) * (d ** -0.5)
+    qb = qg.reshape(b, nq, q_block, n_kv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.astype(jnp.float32).reshape(b, nk, kv_block, n_kv, d) \
+        .transpose(1, 0, 2, 3, 4)
+    vb = v.astype(jnp.float32).reshape(b, nk, kv_block, n_kv, dv) \
+        .transpose(1, 0, 2, 3, 4)
+
+    m0 = jnp.full((nq, b, n_kv, g, q_block), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, n_kv, g, q_block), jnp.float32)
+    a0 = jnp.zeros((nq, b, n_kv, g, q_block, dv), jnp.float32)
+
+    def step(carry, ij):
+        m, l, acc = carry
+        i, j = ij
+        qblk = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        logits = jnp.einsum("bKgqd,bkKd->bKgqk", qblk, kblk)
+        qpos = q_offset + i * q_block + jnp.arange(q_block)
+        kpos = j * kv_block + jnp.arange(kv_block)
+        allowed = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            allowed &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            allowed &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(allowed[None, None, None], logits, NEG_INF)
+        mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(mi, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + p.sum(-1)
+        a_new = ai * corr[..., None] + jnp.einsum("bKgqk,bkKd->bKgqd", p, vblk)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (pi, pj))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    y = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
+    return y.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gather-based block-sparse decode (§Perf optimization C — the paper's
+# sparse attention applied to long-context serving)
+# ---------------------------------------------------------------------------
+
+
+def sparse_gather_decode(q, k_cache, v_cache, pos, cfg):
+    """Decode one token reading ONLY the active kv blocks of the paper's
+    sparse pattern (sinks + local band + strided global) — HBM traffic per
+    token drops from the full cache to the active fraction.
+
+    q: (B,1,H,hd); caches: (B,Sc,K,hd); pos: traced scalar (token written at
+    ``pos``; cache_len = pos+1)."""
+    b, _, h, d = q.shape
+    sc = k_cache.shape[1]
+    n_kv = k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = h // n_kv
+    bs = cfg.block_size
+    assert sc % bs == 0
+    n_blocks = sc // bs
+    n_strided = max(1, n_blocks // cfg.stride)
+    qblk = pos // bs
+
+    sink_idx = jnp.arange(cfg.sink_blocks)
+    local_idx = qblk - cfg.local_blocks + 1 + jnp.arange(cfg.local_blocks)
+    strided_idx = jnp.arange(n_strided) * cfg.stride
+    # validity + de-dup (a block must be counted once in the softmax):
+    sink_ok = sink_idx <= qblk
+    local_ok = (local_idx >= 0) & (local_idx >= cfg.sink_blocks) \
+        & (local_idx <= qblk)
+    strided_ok = (strided_idx >= cfg.sink_blocks) \
+        & (strided_idx < qblk - cfg.local_blocks + 1)
+    idx = jnp.concatenate([sink_idx, jnp.clip(local_idx, 0, n_blocks - 1),
+                           strided_idx])
+    ok = jnp.concatenate([sink_ok, local_ok, strided_ok])
+
+    kb = k_cache.reshape(b, n_blocks, bs, n_kv, d)
+    vb = v_cache.reshape(b, n_blocks, bs, n_kv, dv)
+    kg = jnp.take(kb, idx, axis=1)          # (B, A, bs, K, d)
+    vg = jnp.take(vb, idx, axis=1)
+
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32) * (d ** -0.5)
+    logits = jnp.einsum("bKgd,bakKd->bKgak", qg, kg.astype(jnp.float32))
+    kpos = idx[:, None] * bs + jnp.arange(bs)[None, :]
+    allowed = (kpos <= pos) & ok[:, None]
+    logits = jnp.where(allowed[None, None, None], logits, NEG_INF)
+    a = idx.shape[0]
+    flat = logits.reshape(b, n_kv, g, a * bs)
+    probs = jax.nn.softmax(flat, axis=-1).reshape(logits.shape)
+    out = jnp.einsum("bKgak,bakKd->bKgd", probs, vg.astype(jnp.float32))
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sparse KV cache (§Perf optimization C — the paper's sparse attention as a
+# cache ARCHITECTURE)
+# ---------------------------------------------------------------------------
+#
+# Under the static block-sparse pattern, a position is ever attended again
+# only if it lies in a sink/strided block or within the trailing local band.
+# So the decode cache needs just: (i) a persistent region holding the
+# sink+strided blocks (≈ S/stride slots), and (ii) a ring buffer of the last
+# (local+1) blocks.  Cache memory AND per-token HBM reads shrink ~stride×,
+# reads are contiguous (no dynamic gather → no cross-shard collectives), and
+# the realized pattern is the paper's pattern with a (local+1)-block band.
+
+
+def sparse_kv_layout(seq_len: int, cfg: SparseAttnConfig):
+    """Static layout: persistent block list + block→slot lookup + ring size."""
+    bs = cfg.block_size
+    nb = -(-seq_len // bs)
+    pers_blocks = sorted(set(range(min(cfg.sink_blocks, nb)))
+                         | set(range(0, nb, cfg.stride)))
+    block2slot = np.full((nb,), -1, np.int32)
+    for slot, blk in enumerate(pers_blocks):
+        block2slot[blk] = slot
+    ring_blocks = cfg.local_blocks + 1
+    return (np.asarray(pers_blocks, np.int32), block2slot,
+            ring_blocks * bs, len(pers_blocks) * bs)
+
+
+def sparse_kv_write(cache, k_new, v_new, pos, cfg: SparseAttnConfig,
+                    seq_len: int):
+    """Write one token (B,1,K,hd) into {k_pers,v_pers,k_ring,v_ring}."""
+    bs = cfg.block_size
+    pers_blocks, block2slot, ring_slots, n_pers = sparse_kv_layout(seq_len, cfg)
+    b2s = jnp.asarray(block2slot)
+    blk = pos // bs
+    pslot_blk = b2s[blk]
+    pers_idx = jnp.where(pslot_blk >= 0, pslot_blk * bs + pos % bs, n_pers)
+    out = dict(cache)
+    out["k_pers"] = cache["k_pers"].at[:, pers_idx].set(
+        k_new[:, 0].astype(cache["k_pers"].dtype), mode="drop")
+    out["v_pers"] = cache["v_pers"].at[:, pers_idx].set(
+        v_new[:, 0].astype(cache["v_pers"].dtype), mode="drop")
+    rslot = pos % ring_slots
+    out["k_ring"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_ring"], k_new.astype(cache["k_ring"].dtype), rslot, axis=1)
+    out["v_ring"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v_ring"], v_new.astype(cache["v_ring"].dtype), rslot, axis=1)
+    return out
+
+
+def sparse_kv_decode(q, cache, pos, cfg: SparseAttnConfig, seq_len: int):
+    """Attend over the sparse cache.  q: (B,1,H,hd) → (B,1,H,hd)."""
+    bs = cfg.block_size
+    pers_blocks, _, ring_slots, n_pers = sparse_kv_layout(seq_len, cfg)
+    b, _, h, d = q.shape
+    n_kv = cache["k_pers"].shape[2]
+    g = h // n_kv
+    qblk = pos // bs
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32) * (d ** -0.5)
+
+    # persistent region: slot → absolute position (static formula)
+    slot_blk = jnp.asarray(np.repeat(pers_blocks, bs))
+    slot_pos = jnp.asarray(np.repeat(pers_blocks, bs) * bs
+                           + np.tile(np.arange(bs), len(pers_blocks)))
+    pers_ok = (slot_pos <= pos) & (slot_blk <= qblk - cfg.local_blocks - 1)
+    lp_ = jnp.einsum("bKgd,btKd->bKgt", qg,
+                     cache["k_pers"].astype(jnp.float32))
+    lp_ = jnp.where(pers_ok[None, None, None], lp_, NEG_INF)
+
+    # ring region: slot r holds the largest position ≤ pos with p%ring == r
+    r = jnp.arange(ring_slots)
+    rpos = (pos // ring_slots) * ring_slots + r
+    rpos = jnp.where(rpos > pos, rpos - ring_slots, rpos)
+    # block-aligned band: ring supplies exactly blocks (qblk-local ... qblk],
+    # persistent region everything at or below qblk-local-1 — disjoint union
+    ring_ok = (rpos >= 0) & (rpos >= (qblk - cfg.local_blocks) * bs)
+    lr_ = jnp.einsum("bKgd,btKd->bKgt", qg,
+                     cache["k_ring"].astype(jnp.float32))
+    lr_ = jnp.where(ring_ok[None, None, None], lr_, NEG_INF)
+
+    # merge the two regions by partial-softmax stats — no concat of the
+    # (seq-sharded) persistent logits with the (replicated) ring logits,
+    # so SPMD reduces each region independently (tiny collectives).
+    def stats(lg, vals):
+        m = lg.max(-1, keepdims=True)
+        p = jnp.exp(lg - m)
+        l = p.sum(-1, keepdims=True)
+        acc = jnp.einsum("bKgt,btKd->bKgd", p, vals.astype(jnp.float32))
+        return m[..., 0], l[..., 0], acc
+
+    m1, l1, a1 = stats(lp_, cache["v_pers"])
+    m2, l2, a2 = stats(lr_, cache["v_ring"])
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    out = (a1 * c1[..., None] + a2 * c2[..., None]) / \
+        jnp.maximum(l1 * c1 + l2 * c2, 1e-30)[..., None]
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Sequence mode materializes per-head k/v from the compressed latent (fine with
+remat); decode mode uses the *absorbed* formulation — q is projected into the
+kv_lora latent space so attention runs directly against the compressed cache
+(c_kv, k_rope), which is the whole point of MLA's small KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models import attention as attn
+from repro.models.norms import rmsnorm
+from repro.models.rope import apply_rope
+
+
+def init_mla(key, d_model: int, n_heads: int, cfg: MLAConfig, dtype):
+    ks = jax.random.split(key, 5)
+    qk = cfg.nope_head_dim + cfg.rope_head_dim
+    std = d_model ** -0.5
+    return {
+        "wq_a": (jax.random.normal(ks[0], (d_model, cfg.q_lora_rank)) * std).astype(dtype),
+        "q_norm": {"scale": jnp.zeros((cfg.q_lora_rank,), dtype)},
+        "wq_b": (jax.random.normal(ks[1], (cfg.q_lora_rank, n_heads * qk))
+                 * cfg.q_lora_rank ** -0.5).astype(dtype),
+        "wkv_a": (jax.random.normal(ks[2], (d_model, cfg.kv_lora_rank + cfg.rope_head_dim))
+                  * std).astype(dtype),
+        "kv_norm": {"scale": jnp.zeros((cfg.kv_lora_rank,), dtype)},
+        "wkv_b": (jax.random.normal(ks[3], (cfg.kv_lora_rank,
+                                            n_heads * (cfg.nope_head_dim + cfg.v_head_dim)))
+                  * cfg.kv_lora_rank ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[4], (n_heads * cfg.v_head_dim, d_model))
+               * (n_heads * cfg.v_head_dim) ** -0.5).astype(dtype),
+    }
+
+
+def _project_q(x, p, cfg: MLAConfig, n_heads: int, positions, rope_theta, eps):
+    b, s, _ = x.shape
+    cq = rmsnorm(x @ p["wq_a"], p["q_norm"]["scale"], eps)
+    q = (cq @ p["wq_b"]).reshape(b, s, n_heads, cfg.nope_head_dim + cfg.rope_head_dim)
+    q_nope, q_pe = q[..., :cfg.nope_head_dim], q[..., cfg.nope_head_dim:]
+    q_pe = apply_rope(q_pe, positions, rope_theta)
+    return q_nope, q_pe
+
+
+def _compress_kv(x, p, cfg: MLAConfig, positions, rope_theta, eps):
+    kv_a = x @ p["wkv_a"]
+    c_kv = rmsnorm(kv_a[..., :cfg.kv_lora_rank], p["kv_norm"]["scale"], eps)
+    k_pe = apply_rope(kv_a[..., None, cfg.kv_lora_rank:], positions, rope_theta)
+    return c_kv, k_pe[..., 0, :]                       # (B,S,r), (B,S,rope_hd)
+
+
+def mla_seq(x, p, cfg: MLAConfig, n_heads: int, positions, rope_theta: float,
+            eps: float, *, causal: bool = True, impl: str = "auto",
+            sparse_cfg=None, q_offset: int = 0, causal_skip: bool = False):
+    """Full-sequence MLA (train / prefill).  Returns (y, (c_kv, k_pe))."""
+    b, s, _ = x.shape
+    q_nope, q_pe = _project_q(x, p, cfg, n_heads, positions, rope_theta, eps)
+    c_kv, k_pe = _compress_kv(x, p, cfg, positions, rope_theta, eps)
+    kv = (c_kv @ p["wkv_b"]).reshape(
+        b, s, n_heads, cfg.nope_head_dim + cfg.v_head_dim)
+    k_nope, v = kv[..., :cfg.nope_head_dim], kv[..., cfg.nope_head_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None],
+                                  (b, s, n_heads, cfg.rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    if impl == "sparse" and sparse_cfg is not None:
+        y = attn.block_sparse_attention(q, k, v, sparse_cfg, q_offset=q_offset)
+    elif impl == "dense" or s <= 2048:
+        y = attn.dense_attention(q, k, v, causal=causal, q_offset=q_offset)
+    elif causal and causal_skip:
+        y = attn.chunked_attention_pairs(q, k, v, causal=True,
+                                         q_offset=q_offset)
+    else:
+        y = attn.chunked_attention(q, k, v, causal=causal, q_offset=q_offset)
+    y = y.reshape(b, s, n_heads * cfg.v_head_dim) @ p["wo"]
+    return y, (c_kv, k_pe)
+
+
+def mla_decode(x, p, cfg: MLAConfig, n_heads: int, pos, rope_theta: float,
+               eps: float, ckv_cache, kpe_cache, *, sparse_cfg=None):
+    """Absorbed-MLA decode.  x: (B,1,d); caches: (B,Sc,r) / (B,Sc,rope_hd);
+    ``pos``: traced scalar — index the new token was written at.
+    Caller must have already written the new (c_kv, k_pe) at ``pos``."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos)
+    q_nope, q_pe = _project_q(x, p, cfg, n_heads, positions, rope_theta, eps)
+    r = cfg.kv_lora_rank
+    wkv_b = p["wkv_b"].reshape(r, n_heads, cfg.nope_head_dim + cfg.v_head_dim)
+    wk_b, wv_b = wkv_b[..., :cfg.nope_head_dim], wkv_b[..., cfg.nope_head_dim:]
+
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bhr,btr->bht", q_abs, ckv_cache.astype(jnp.float32))
+              + jnp.einsum("bhp,btp->bht", q_pe[:, 0].astype(jnp.float32),
+                           kpe_cache.astype(jnp.float32))) * scale
+    sc = ckv_cache.shape[1]
+    slot = jnp.arange(sc)
+    allowed = slot <= pos
+    if sparse_cfg is not None:
+        bs = sparse_cfg.block_size
+        blk, qblk = slot // bs, pos // bs
+        a = (blk < sparse_cfg.sink_blocks)
+        a |= blk > qblk - sparse_cfg.local_blocks
+        a |= (blk % sparse_cfg.stride) == 0
+        allowed &= a
+    logits = jnp.where(allowed[None, None], logits, attn.NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", probs, ckv_cache.astype(jnp.float32))
+    v_out = jnp.einsum("bhr,rhv->bhv", ctx, wv_b.astype(jnp.float32))
+    y = v_out.reshape(b, 1, n_heads * cfg.v_head_dim).astype(x.dtype) @ p["wo"]
+    return y

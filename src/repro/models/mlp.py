@@ -1,0 +1,31 @@
+"""Dense feed-forward layers (bias-free; see DESIGN.md deviations)."""
+import jax
+import jax.numpy as jnp
+
+
+def act_fn(name: str):
+    if name in ("swiglu",):
+        return jax.nn.silu
+    return jax.nn.gelu
+
+
+def mlp(x, params, act: str):
+    """swiglu/geglu: act(x·Wg) * (x·Wu) · Wd ;  gelu: act(x·Wu) · Wd."""
+    if act in ("swiglu", "geglu"):
+        h = act_fn(act)(x @ params["wg"]) * (x @ params["wu"])
+    else:
+        h = act_fn(act)(x @ params["wu"])
+    return h @ params["wd"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d_model ** -0.5
+    std_out = d_ff ** -0.5
+    p = {
+        "wu": (jax.random.normal(k2, (d_model, d_ff)) * std_in).astype(dtype),
+        "wd": (jax.random.normal(k3, (d_ff, d_model)) * std_out).astype(dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["wg"] = (jax.random.normal(k1, (d_model, d_ff)) * std_in).astype(dtype)
+    return p

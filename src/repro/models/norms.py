@@ -1,0 +1,25 @@
+"""Normalization layers (functional)."""
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x, params, kind: str, eps: float):
+    if kind == "rms":
+        return rmsnorm(x, params["scale"], eps)
+    return layernorm(x, params["scale"], params["bias"], eps)

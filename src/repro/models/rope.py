@@ -1,0 +1,25 @@
+"""Rotary position embeddings (functional, half-rotation convention)."""
+import jax.numpy as jnp
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 → cos/sin of shape positions.shape + (head_dim/2,)."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    cos, sin = rope_cos_sin(positions, d, theta)
+    # broadcast to (B, S, 1, D/2)
+    while cos.ndim < x.ndim - 1:
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, sgd, clip_by_global_norm, global_norm,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant, cosine_decay, linear_warmup_cosine,
+)

@@ -1,0 +1,108 @@
+"""Optimizers built from scratch (optax is not available offline).
+
+API mirrors the (init, update) convention::
+
+    opt = adamw(lr_schedule, weight_decay=0.01)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = tree_add(params, updates)          # updates already include -lr
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree):
+    sq = jax.tree_util.tree_map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(lambda a, b: a + b, sq))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def _as_schedule(lr):
+    return lr if callable(lr) else (lambda step: lr)
+
+
+def adamw(lr, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          update_mask: Optional[Callable[[str], bool]] = None) -> Optimizer:
+    """AdamW with f32 moments.  ``update_mask(path)`` False → leaf untouched
+    (used to keep LoRA enable-masks and frozen leaves out of the step)."""
+    lr_fn = _as_schedule(lr)
+    from repro import trees
+
+    def init(params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": zeros,
+                "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+        def upd(m, v, p):
+            u = -(lr_t * (m * mu_hat_scale
+                          / (jnp.sqrt(v * nu_hat_scale) + eps)
+                          + weight_decay * p.astype(jnp.float32)))
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        if update_mask is not None:
+            updates = trees.map_with_path(
+                lambda path, u: u if update_mask(path) else jnp.zeros_like(u),
+                updates)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr, *, momentum: float = 0.0) -> Optimizer:
+    lr_fn = _as_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            updates = jax.tree_util.tree_map(
+                lambda g, p: (-lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                grads, params)
+            return updates, {"step": step}
+        m = jax.tree_util.tree_map(
+            lambda mm, g: momentum * mm + g.astype(jnp.float32),
+            state["m"], grads)
+        updates = jax.tree_util.tree_map(
+            lambda mm, p: (-lr_t * mm).astype(p.dtype), m, params)
+        return updates, {"m": m, "step": step}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,3 @@
+from repro.rlhf.reward_model import RewardModel, train_reward_model  # noqa: F401
+from repro.rlhf.rollout import generate  # noqa: F401
+from repro.rlhf.ppo import PPOConfig, ppo_round  # noqa: F401

@@ -1,0 +1,134 @@
+"""PPO for LM fine-tuning (paper §IV-C Step 3: update the unfrozen part of
+the local LLM with PPO against the personalized reward function).
+
+Standard clipped-PPO with GAE, a learned value head over hidden states, and
+a per-token KL penalty to the round's reference (global) policy.  The
+terminal reward is the client's personalized quality reward (double reward
+model combination) plus the negative L2 regularization toward the global
+model — exactly the paper's reward decomposition.
+
+``PPOTrainer`` builds its jitted phases once (rollout-stats prep + clipped
+update) so per-round calls don't retrace.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import trees
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    gen_len: int = 24
+    clip: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.001
+    kl_coef: float = 0.05
+    gamma: float = 1.0
+    lam: float = 0.95
+    temperature: float = 1.0
+    ppo_epochs: int = 2
+
+
+def seq_logprobs_values(model, params, tokens):
+    """LM shift: hidden at position i scores token i+1.
+    Returns logp (B, S-1), values (B, S-1), entropy (B, S-1)."""
+    hidden, _ = model.forward(params, tokens[:, :-1])
+    logits = model.logits(params, hidden)                  # (B, S-1, V)
+    logall = jax.nn.log_softmax(logits, axis=-1)
+    logp = jnp.take_along_axis(logall, tokens[:, 1:, None], axis=-1)[..., 0]
+    ent = -(jnp.exp(logall) * logall).sum(-1)
+    # value head reads a DETACHED trunk: the critic regression must not
+    # distort the policy's representation (single-trunk PPO pathology)
+    values = (jax.lax.stop_gradient(hidden).astype(jnp.float32)
+              @ params["value_head"].astype(jnp.float32))[..., 0]
+    return logp, values, ent
+
+
+def gae(rewards, values, mask, gamma: float, lam: float):
+    """rewards/values/mask: (B, T) → (advantages, returns)."""
+    def scan_fn(carry, xs):
+        r, v, v_next, m = xs
+        delta = r + gamma * v_next * m - v
+        adv = delta + gamma * lam * m * carry
+        return adv, adv
+
+    v_next = jnp.concatenate([values[:, 1:], jnp.zeros_like(values[:, :1])], 1)
+    xs = (rewards.T, values.T, v_next.T, mask.T)
+    xs = jax.tree_util.tree_map(lambda x: x[::-1], xs)
+    _, adv_rev = jax.lax.scan(scan_fn, jnp.zeros(rewards.shape[0]), xs)
+    adv = adv_rev[::-1].T
+    return adv, adv + values
+
+
+class PPOTrainer:
+    def __init__(self, model, opt, cfg: PPOConfig, prompt_len: int):
+        self.model = model
+        self.opt = opt
+        self.cfg = cfg
+        self.prompt_len = prompt_len
+
+        def prep(params, ref_params, tokens, terminal_reward):
+            resp_mask = (jnp.arange(tokens.shape[1] - 1)[None]
+                         >= prompt_len - 1).astype(jnp.float32)
+            resp_mask = jnp.broadcast_to(resp_mask, tokens[:, 1:].shape)
+            old_logp, old_values, _ = seq_logprobs_values(model, params, tokens)
+            ref_logp, _, _ = seq_logprobs_values(model, ref_params, tokens)
+            kl = old_logp - ref_logp
+            rewards = -cfg.kl_coef * kl * resp_mask
+            rewards = rewards.at[:, -1].add(terminal_reward)
+            adv, ret = gae(rewards, old_values, resp_mask, cfg.gamma, cfg.lam)
+            adv = (adv - adv.mean()) / jnp.maximum(adv.std(), 1e-6)
+            mean_kl = (kl * resp_mask).sum() / resp_mask.sum()
+            return old_logp, adv, ret, resp_mask, mean_kl
+
+        def step(params, opt_state, tokens, old_logp, adv, ret, resp_mask,
+                 grad_mask):
+            def loss_fn(p):
+                logp, values, ent = seq_logprobs_values(model, p, tokens)
+                ratio = jnp.exp(logp - old_logp)
+                unclipped = ratio * adv
+                clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * adv
+                denom = resp_mask.sum()
+                pg = -(jnp.minimum(unclipped, clipped) * resp_mask).sum() / denom
+                vf = (jnp.square(values - ret) * resp_mask).sum() / denom
+                en = (ent * resp_mask).sum() / denom
+                return pg + cfg.vf_coef * vf - cfg.ent_coef * en, (pg, vf, en)
+
+            (loss, auxes), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            if grad_mask is not None:
+                grads = jax.tree_util.tree_map(
+                    lambda g, m: g * jnp.asarray(m, g.dtype), grads, grad_mask)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return trees.tree_add(params, updates), opt_state, loss, auxes
+
+        self._prep = jax.jit(prep)
+        self._step = jax.jit(step)
+
+    def round(self, params, ref_params, opt_state, tokens, terminal_reward,
+              grad_mask=None):
+        """One PPO pass (cfg.ppo_epochs clipped updates) over a rollout batch."""
+        old_logp, adv, ret, resp_mask, mean_kl = self._prep(
+            params, ref_params, tokens, terminal_reward)
+        stats = {}
+        for _ in range(self.cfg.ppo_epochs):
+            params, opt_state, loss, (pg, vf, en) = self._step(
+                params, opt_state, tokens, old_logp, adv, ret, resp_mask,
+                grad_mask)
+        stats = {"loss": float(loss), "pg": float(pg), "vf": float(vf),
+                 "entropy": float(en), "kl": float(mean_kl)}
+        return params, opt_state, stats
+
+
+def ppo_round(model, params, ref_params, opt, opt_state, rollout_tokens,
+              prompt_len: int, terminal_reward, cfg: PPOConfig,
+              grad_mask=None):
+    """One-shot convenience wrapper (tests).  Builds a trainer per call —
+    use PPOTrainer directly in loops."""
+    tr = PPOTrainer(model, opt, cfg, prompt_len)
+    return tr.round(params, ref_params, opt_state, rollout_tokens,
+                    terminal_reward, grad_mask)

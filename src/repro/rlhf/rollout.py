@@ -1,0 +1,27 @@
+"""Autoregressive rollout for PPO — reuses the serving path (prefill +
+KV-cached decode scan), the same machinery the inference launcher uses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def generate(model, params, prompts, gen_len: int, key, *,
+             temperature: float = 1.0):
+    """prompts: (B, P) int32 → tokens (B, P+gen_len).
+
+    Fixed-length generation (EOS handled by the reward masks downstream);
+    scan over decode steps with a KV cache."""
+    b, p = prompts.shape
+    logits, cache = model.prefill(params, prompts, cache_len=p + gen_len)
+
+    def step(carry, k):
+        logits, cache = carry
+        tok = jax.random.categorical(k, logits / temperature, axis=-1)
+        tok = tok[:, None].astype(jnp.int32)
+        new_logits, cache = model.decode_step(params, cache, tok)
+        return (new_logits, cache), tok[:, 0]
+
+    keys = jax.random.split(key, gen_len)
+    _, toks = jax.lax.scan(step, (logits, cache), keys)
+    return jnp.concatenate([prompts, toks.T], axis=1)

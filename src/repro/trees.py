@@ -1,0 +1,80 @@
+"""Pytree path utilities: flatten to '/'-joined path dicts, select subtrees
+by predicate, merge — the substrate for PEFT splits and federated partial
+aggregation."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def flatten(tree) -> Dict[str, object]:
+    """→ {'stages/0/layers/1/mixer/wq': leaf, ...} (treedef discarded)."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {"/".join(_key_str(k) for k in path): v for path, v in leaves}
+
+
+def map_with_path(fn: Callable[[str, object], object], tree):
+    """tree_map with the '/'-joined path passed to fn."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, v: fn("/".join(_key_str(k) for k in path), v), tree)
+
+
+def select(tree, pred: Callable[[str], bool]):
+    """Keep leaves whose path satisfies pred; others become None (structure
+    preserved — mergeable with ``merge``)."""
+    return map_with_path(lambda p, v: v if pred(p) else None, tree)
+
+
+def merge(base, overlay):
+    """Take overlay leaf where not None, else base leaf.  Same structure."""
+    return jax.tree_util.tree_map(
+        lambda b, o: b if o is None else o, base, overlay,
+        is_leaf=lambda x: x is None)
+
+
+def mask_like(tree, pred: Callable[[str], bool]):
+    """1.0/0.0 float mask tree by path predicate."""
+    return map_with_path(lambda p, v: float(pred(p)), tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "shape"))
+
+
+def byte_size(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))
+
+
+def tree_add(a, b, scale_b: float = 1.0):
+    return jax.tree_util.tree_map(lambda x, y: x + scale_b * y, a, b)
+
+
+def tree_scale(a, s: float):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jax.numpy.zeros_like, a)
+
+
+def tree_l2(a, b) -> object:
+    """Global squared L2 distance between two trees."""
+    import jax.numpy as jnp
+    d = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(jnp.square(x.astype(jnp.float32)
+                                        - y.astype(jnp.float32))), a, b)
+    return jax.tree_util.tree_reduce(lambda x, y: x + y, d)

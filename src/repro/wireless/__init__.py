@@ -1,0 +1,2 @@
+from repro.wireless.channel import RayleighChannel, ChannelReport  # noqa: F401
+from repro.wireless.cost import CommLedger, tree_bytes  # noqa: F401

@@ -1,0 +1,57 @@
+"""Communication-cost accounting (the paper's Figs. 4/5 right panels)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+
+def tree_bytes(tree, *, nonzero_mask=None) -> int:
+    """Bytes of a pytree payload.  With ``nonzero_mask`` (same structure of
+    1/0 float masks), masked-out parameters are not transmitted (the paper's
+    sparse-attention upload saving)."""
+    total = 0
+    leaves = jax.tree_util.tree_leaves(tree)
+    if nonzero_mask is None:
+        for x in leaves:
+            if hasattr(x, "size"):
+                total += int(x.size) * x.dtype.itemsize
+        return total
+    masks = jax.tree_util.tree_leaves(nonzero_mask)
+    for x, m in zip(leaves, masks):
+        if not hasattr(x, "size"):
+            continue
+        m = np.asarray(m)
+        frac = float(m.mean()) if m.size else 1.0
+        total += int(round(x.size * frac)) * x.dtype.itemsize
+    return total
+
+
+@dataclasses.dataclass
+class CommLedger:
+    """Per-round, per-client record of upload traffic and delay."""
+    rounds: List[Dict] = dataclasses.field(default_factory=list)
+
+    def log_round(self, reports):
+        self.rounds.append({
+            "bytes": sum(r.bytes_sent for r in reports),
+            "delay_s": max((r.delay_s for r in reports
+                            if not r.outage), default=0.0),
+            "outages": sum(r.outage for r in reports),
+            "per_client": [dataclasses.asdict(r) for r in reports],
+        })
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r["bytes"] for r in self.rounds)
+
+    @property
+    def mean_round_bytes(self) -> float:
+        return self.total_bytes / max(len(self.rounds), 1)
+
+    @property
+    def mean_round_delay(self) -> float:
+        return float(np.mean([r["delay_s"] for r in self.rounds])) \
+            if self.rounds else 0.0

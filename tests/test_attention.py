@@ -1,0 +1,106 @@
+"""Attention-core equivalences (jnp lowering paths used by the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SparseAttnConfig
+from repro.models import attention as A
+
+
+@pytest.fixture
+def qkv():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    return (jax.random.normal(ks[0], (2, 256, 8, 32)),
+            jax.random.normal(ks[1], (2, 256, 4, 32)),
+            jax.random.normal(ks[2], (2, 256, 4, 32)))
+
+
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("qb,kb", [(64, 64), (128, 32), (256, 256)])
+def test_chunked_matches_dense(qkv, window, qb, kb):
+    q, k, v = qkv
+    want = A.dense_attention(q, k, v, causal=True, window=window)
+    got = A.chunked_attention(q, k, v, causal=True, window=window,
+                              q_block=qb, kv_block=kb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_sparse_matches_masked_dense(qkv):
+    q, k, v = qkv
+    scfg = SparseAttnConfig(block_size=16, local_blocks=2, sink_blocks=1,
+                            stride=4)
+    got = A.block_sparse_attention(q, k, v, scfg)
+    idx, valid = A.sparse_block_table(16, 16, scfg)
+    mask = np.zeros((256, 256), bool)
+    for i in range(16):
+        for a in range(idx.shape[1]):
+            if valid[i, a]:
+                j = idx[i, a]
+                mask[i * 16:(i + 1) * 16, j * 16:(j + 1) * 16] = True
+    mask &= np.tril(np.ones((256, 256), bool))
+    want = A.dense_attention(q, k, v, causal=True, mask=jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_sparse_table_is_causal_and_covers_local_band():
+    scfg = SparseAttnConfig(block_size=16, local_blocks=3, sink_blocks=1,
+                            stride=4)
+    idx, valid = A.sparse_block_table(32, 32, scfg)
+    for i in range(32):
+        active = set(idx[i, valid[i]])
+        assert all(j <= i for j in active), "future block attended"
+        assert 0 in active, "sink missing"
+        for j in range(max(0, i - 2), i + 1):
+            assert j in active, f"local band hole at q={i}, kv={j}"
+
+
+def test_decode_matches_dense_single_query(qkv):
+    q, k, v = qkv
+    q1 = q[:, 100:101]
+    want = A.dense_attention(q1, k[:, :101], v[:, :101], causal=True,
+                             q_offset=100)
+    got = A.decode_attention(q1, k, v, cache_len=101)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_decode_ring_window_equivalence():
+    """A ring-buffered window cache must reproduce windowed attention."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    S, W = 96, 32
+    q = jax.random.normal(ks[0], (1, S, 4, 16))
+    k = jax.random.normal(ks[1], (1, S, 4, 16))
+    v = jax.random.normal(ks[2], (1, S, 4, 16))
+    want = A.dense_attention(q, k, v, causal=True, window=W)
+    # simulate decoding with a ring cache of size W
+    kc = jnp.zeros((1, W, 4, 16))
+    vc = jnp.zeros((1, W, 4, 16))
+    outs = []
+    for t in range(S):
+        slot = t % W
+        kc = kc.at[:, slot].set(k[:, t])
+        vc = vc.at[:, slot].set(v[:, t])
+        outs.append(A.decode_attention(q[:, t:t + 1], kc, vc,
+                                       cache_len=t + 1, ring=True))
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_mla_absorbed_decode_matches_seq():
+    """Absorbed-MLA decode == naive expanded MLA at the same position."""
+    from repro.configs.base import MLAConfig
+    from repro.models import mla as M
+    cfg = MLAConfig(kv_lora_rank=16, q_lora_rank=24, rope_head_dim=8,
+                    nope_head_dim=16, v_head_dim=16)
+    key = jax.random.PRNGKey(2)
+    p = M.init_mla(key, 64, 4, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 33, 64))
+    pos = jnp.arange(33)
+    y_seq, (ckv, kpe) = M.mla_seq(x, p, cfg, 4, pos, 1e4, 1e-5, impl="dense")
+    y_dec = M.mla_decode(x[:, 32:33], p, cfg, 4, 32, 1e4, 1e-5, ckv, kpe)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_seq[:, 32]), atol=2e-4, rtol=1e-3)

@@ -1,0 +1,143 @@
+"""Pallas kernel sweeps (deliverable c): shapes × dtypes, assert_allclose
+against the pure-jnp oracles, interpret=True on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SparseAttnConfig
+
+
+def _qkv(key, b, sq, sk, h, kh, d, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, h, d), dtype)
+    k = jax.random.normal(k2, (b, sk, kh, d), dtype)
+    v = jax.random.normal(k3, (b, sk, kh, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kh,d,bq,bk", [
+    (2, 256, 8, 4, 64, 64, 64),
+    (1, 128, 4, 4, 32, 128, 32),
+    (2, 512, 4, 1, 64, 128, 128),
+])
+@pytest.mark.parametrize("window", [0, 96])
+def test_flash_attention_sweep(dtype, b, s, h, kh, d, bq, bk, window):
+    from repro.kernels.flash_attn.ops import flash_attention
+    from repro.models.attention import dense_attention
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, s, s, h, kh, d, dtype)
+    out = flash_attention(q, k, v, causal=True, window=window, bq=bq, bk=bk)
+    ref = dense_attention(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("scfg", [
+    SparseAttnConfig(block_size=32, local_blocks=2, sink_blocks=1, stride=4),
+    SparseAttnConfig(block_size=64, local_blocks=1, sink_blocks=2, stride=2),
+])
+def test_block_sparse_sweep(dtype, scfg):
+    from repro.kernels.block_sparse_attn.ops import block_sparse_attention
+    from repro.models.attention import block_sparse_attention as jnp_sparse
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 256, 256, 8, 4, 64, dtype)
+    out = block_sparse_attention(q, k, v, scfg)
+    ref = jnp_sparse(q, k, v, scfg)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_block_sparse_kernel_vs_dense_masked_oracle():
+    from repro.kernels.block_sparse_attn.kernel import block_sparse_attention_kernel
+    from repro.kernels.block_sparse_attn.ref import block_sparse_ref
+    from repro.models.attention import sparse_block_table
+    scfg = SparseAttnConfig(block_size=32, local_blocks=2, sink_blocks=1,
+                            stride=4)
+    key = jax.random.PRNGKey(2)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (4, 256, 32))
+    k = jax.random.normal(k2, (2, 256, 32))
+    v = jax.random.normal(k3, (2, 256, 32))
+    idx, valid = sparse_block_table(8, 8, scfg)
+    out = block_sparse_attention_kernel(q, k, v, jnp.asarray(idx),
+                                        jnp.asarray(valid.astype(np.int32)),
+                                        block=32)
+    ref = block_sparse_ref(q, k, v, idx, valid, block=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("p,n", [(16, 8), (32, 16)])
+def test_ssd_chunk_sweep(dtype, chunk, p, n):
+    from repro.kernels.ssd_chunk.ops import ssd_scan
+    from repro.kernels.ssd_chunk.ref import ssd_ref
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    b, s, h = 2, 128, 2
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, h, n)) * 0.5
+    cm = jax.random.normal(ks[4], (b, s, h, n)) * 0.5
+    y, hf = ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s)
+    y_r, h_r = ssd_ref(xf, dtf, jnp.tile(a, b),
+                       bm.transpose(0, 2, 1, 3).reshape(b * h, s, n),
+                       cm.transpose(0, 2, 1, 3).reshape(b * h, s, n))
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y_r.reshape(b, h, s, p).transpose(0, 2, 1, 3)),
+        atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf),
+                               np.asarray(h_r.reshape(b, h, p, n)),
+                               atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,r", [(128, 256, 384, 8), (64, 128, 128, 16)])
+def test_lora_fused_sweep(dtype, m, k, n, r):
+    from repro.kernels.lora_fused.ops import lora_matmul
+    from repro.kernels.lora_fused.ref import lora_ref
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = jax.random.normal(ks[0], (m, k), dtype)
+    w = (jax.random.normal(ks[1], (k, n)) * 0.05).astype(dtype)
+    a = (jax.random.normal(ks[2], (k, r)) * 0.05).astype(dtype)
+    b = (jax.random.normal(ks[3], (r, n)) * 0.05).astype(dtype)
+    out = lora_matmul(x, w, a, b, scale=2.0)
+    ref = lora_ref(x, w, a, b, scale=2.0)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_lora_fused_matches_merged_weights():
+    """Fused kernel == apply_lora-merged dense matmul (serving equivalence)."""
+    from repro.kernels.lora_fused.ops import lora_matmul
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    x = jax.random.normal(ks[0], (32, 128))
+    w = jax.random.normal(ks[1], (128, 128)) * 0.05
+    a = jax.random.normal(ks[2], (128, 8)) * 0.05
+    b = jax.random.normal(ks[3], (8, 128)) * 0.05
+    merged = w + 2.0 * (a @ b)
+    np.testing.assert_allclose(np.asarray(lora_matmul(x, w, a, b, scale=2.0)),
+                               np.asarray(x @ merged), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("pos,window", [(100, 0), (255, 0), (200, 64), (0, 0)])
+def test_decode_attention_kernel_sweep(dtype, pos, window):
+    from repro.kernels.decode_attn.ops import decode_attention
+    from repro.models.attention import decode_attention as jnp_decode
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 1, 8, 64), dtype)
+    k = jax.random.normal(ks[1], (2, 256, 4, 64), dtype)
+    v = jax.random.normal(ks[2], (2, 256, 4, 64), dtype)
+    out = decode_attention(q, k, v, pos, window=window, bk=64)
+    ref = jnp_decode(q, k, v, cache_len=pos + 1, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)

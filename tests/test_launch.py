@@ -1,0 +1,140 @@
+"""Launcher-layer tests: step builders run on CPU, jaxpr cost counter is
+consistent, dry-run helpers behave."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.launch.jaxpr_cost import count_flops, step_flops
+from repro.launch.steps import (make_input_batch_shapes, make_peft_step,
+                                make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models import Model
+from repro.models import peft as peft_mod
+from repro.sharding import MeshCtx
+from repro import trees
+
+MESH = MeshCtx.single_device()
+
+
+def _tiny():
+    cfg = get_config("tinyllama-1.1b").reduced(d_model=64, repeats=2)
+    return cfg, Model(cfg, meshctx=MESH)
+
+
+def _batch(cfg, b=2, s=32):
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks, "mask": jnp.ones((b, s))}
+
+
+def test_train_step_decreases_loss():
+    cfg, model = _tiny()
+    params = model.init(jax.random.PRNGKey(0))
+    step_fn, opt = make_train_step(model, lr=5e-3)
+    opt_state = opt.init(params)
+    batch = _batch(cfg)
+    jstep = jax.jit(step_fn)
+    losses = []
+    for _ in range(8):
+        params, opt_state, loss = jstep(params, opt_state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_peft_step_only_touches_trainable():
+    cfg, model = _tiny()
+    base = model.init(jax.random.PRNGKey(0))
+    pc = peft_mod.PEFTConfig(lora_rank=4, adapter_dim=8)
+    params = peft_mod.init_adapters(jax.random.PRNGKey(1), base, cfg, pc)
+    lora = peft_mod.init_lora(jax.random.PRNGKey(2), params, pc)
+    adapters = trees.select(params, peft_mod.is_adapter_path)
+    trainable = {"adapters": adapters, "lora": lora}
+    step_fn, opt = make_peft_step(model, pc, lr=5e-3)
+    opt_state = opt.init(trainable)
+    t2, _, loss = jax.jit(step_fn)(trainable, params, opt_state, _batch(cfg))
+    assert np.isfinite(float(loss))
+    # adapters moved
+    moved = trees.flatten(jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).sum()),
+        trainable["adapters"], t2["adapters"]))
+    assert any(v and v > 0 for v in moved.values() if v is not None)
+
+
+def test_prefill_and_serve_steps():
+    cfg, model = _tiny()
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, b=2, s=16)
+    prefill = make_prefill_step(model, cache_len=32)
+    logits, cache = jax.jit(prefill)(params, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    serve = make_serve_step(model)
+    lg, cache = jax.jit(serve)(params, cache, batch["tokens"][:, :1])
+    assert lg.shape == (2, cfg.vocab_size)
+    assert int(cache["pos"]) == 17
+
+
+def test_input_batch_shapes_all_archs():
+    from repro.configs import ASSIGNED
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            b = make_input_batch_shapes(cfg, shape)
+            assert "tokens" in b
+            if cfg.n_prefix_tokens:
+                assert b["patches"].shape[1] == cfg.n_prefix_tokens
+                assert b["tokens"].shape[1] == shape.seq_len - cfg.n_prefix_tokens
+            if cfg.is_encoder_decoder:
+                assert b["frames"].shape[1] == cfg.encoder_seq
+
+
+def test_jaxpr_flop_counter_matmul_exact():
+    def f(a, b):
+        return a @ b
+    flops = step_flops(f, jax.ShapeDtypeStruct((8, 16), jnp.float32),
+                       jax.ShapeDtypeStruct((16, 32), jnp.float32))
+    assert flops == 2 * 8 * 16 * 32
+
+
+def test_jaxpr_flop_counter_scan_multiplies():
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    flops = step_flops(f, jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    assert flops >= 7 * 2 * 8 * 8 * 8
+
+
+def test_jaxpr_flop_counter_remat_counts_recompute():
+    def loss(w, x):
+        @jax.checkpoint
+        def block(h):
+            return jnp.tanh(h @ w)
+        h = block(x)
+        h = block(h)
+        return h.sum()
+
+    def train(w, x):
+        return jax.grad(loss)(w, x)
+
+    base = step_flops(lambda w, x: loss(w, x),
+                      jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                      jax.ShapeDtypeStruct((4, 16), jnp.float32))
+    grad = step_flops(train, jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                      jax.ShapeDtypeStruct((4, 16), jnp.float32))
+    assert grad > 2 * base  # bwd + remat recompute
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collective_bytes
+    hlo = """
+      %ag = bf16[4,128]{1,0} all-gather(bf16[2,128]{1,0} %x), dimensions={0}
+      %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+      %a2a = bf16[8,64]{1,0} all-to-all(bf16[8,64]{1,0} %z), dimensions={0}
+    """
+    detail, wire = parse_collective_bytes(hlo)
+    assert detail["all-gather"] == 4 * 128 * 2
+    assert detail["all-reduce"] == 256 * 4
+    assert detail["all-to-all"] == 8 * 64 * 2
+    assert wire == 2 * 256 * 4 + 4 * 128 * 2 + 8 * 64 * 2

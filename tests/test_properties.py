@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants (deliverable c):
+aggregation algebra, LoRA merge equivalence, channel monotonicity,
+Dirichlet partition completeness, optimizer behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import trees
+from repro.core.aggregation import fedavg, masked_fedavg, partial_fedavg
+
+sane = st.floats(-100, 100, allow_nan=False, width=32)
+
+
+def _tree(vals):
+    a, b, c = vals
+    return {"x": {"w": jnp.full((2, 3), a)}, "y": jnp.full((4,), b),
+            "adapter": {"wd": jnp.full((3,), c)}}
+
+
+@given(st.tuples(sane, sane, sane), st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_fedavg_of_identical_trees_is_identity(vals, n):
+    t = _tree(vals)
+    agg = fedavg([t] * n)
+    for k, v in trees.flatten(agg).items():
+        np.testing.assert_allclose(np.asarray(v),
+                                   np.asarray(trees.flatten(t)[k]),
+                                   rtol=1e-5, atol=1e-30)
+
+
+@given(st.lists(st.tuples(sane, sane, sane), min_size=2, max_size=5))
+@settings(max_examples=25, deadline=None)
+def test_fedavg_within_convex_hull(vals_list):
+    ts = [_tree(v) for v in vals_list]
+    agg = trees.flatten(fedavg(ts))
+    for k in agg:
+        leaves = np.stack([np.asarray(trees.flatten(t)[k]) for t in ts])
+        assert (np.asarray(agg[k]) <= leaves.max(0) + 1e-3).all()
+        assert (np.asarray(agg[k]) >= leaves.min(0) - 1e-3).all()
+
+
+@given(st.tuples(sane, sane, sane), st.tuples(sane, sane, sane))
+@settings(max_examples=25, deadline=None)
+def test_partial_fedavg_touches_only_selected(g, c):
+    glob, client = _tree(g), _tree(c)
+    out = partial_fedavg(glob, [client],
+                         pred=lambda p: p.startswith("adapter"))
+    fo, fg, fc = trees.flatten(out), trees.flatten(glob), trees.flatten(client)
+    for k in fo:
+        if k.startswith("adapter"):
+            np.testing.assert_allclose(np.asarray(fo[k]), np.asarray(fc[k]),
+                                       rtol=1e-5, atol=1e-30)
+        else:
+            np.testing.assert_allclose(np.asarray(fo[k]), np.asarray(fg[k]),
+                                       rtol=1e-5, atol=1e-30)
+
+
+@given(st.tuples(sane, sane, sane), st.tuples(sane, sane, sane))
+@settings(max_examples=25, deadline=None)
+def test_masked_fedavg_keeps_global_under_zero_mask(g, c):
+    glob, client = _tree(g), _tree(c)
+    zeros = jax.tree_util.tree_map(lambda x: jnp.zeros(()), glob)
+    out = masked_fedavg(glob, [client], [zeros])
+    for k, v in trees.flatten(out).items():
+        np.testing.assert_allclose(np.asarray(v),
+                                   np.asarray(trees.flatten(glob)[k]),
+                                   rtol=1e-5, atol=1e-30)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 5.0))
+@settings(max_examples=10, deadline=None)
+def test_dirichlet_partition_complete_and_disjoint(seed, alpha):
+    from repro.data.partition import dirichlet_partition
+    rng = np.random.RandomState(seed % 1000)
+    labels = rng.randint(0, 4, size=200)
+    parts = dirichlet_partition(labels, 4, alpha, seed=seed % 1000)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 200
+    assert len(np.unique(allidx)) == 200
+
+
+@given(st.floats(-10, 30), st.floats(-10, 30), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_channel_rate_monotone_in_snr(snr1, snr2, seed):
+    from repro.wireless import RayleighChannel
+    lo, hi = sorted([snr1, snr2])
+    g = np.random.RandomState(seed).exponential()
+    r_lo = RayleighChannel(mean_snr_db=lo, seed=seed).uplink(1000, gain=g)
+    r_hi = RayleighChannel(mean_snr_db=hi, seed=seed).uplink(1000, gain=g)
+    assert r_hi.rate_bps >= r_lo.rate_bps - 1e-6
+
+
+@given(st.integers(1, 6), st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_lora_merge_equivalence(rank, seed):
+    """apply_lora(W, {A,B}) forward == W·x + s·B(A(x)) for random factors."""
+    from repro.models.peft import PEFTConfig, apply_lora
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    pc = PEFTConfig(lora_rank=rank, lora_alpha=2.0 * rank,
+                    lora_targets=("mixer/wq",))
+    w = jax.random.normal(ks[0], (8, 8))
+    params = {"stages": [{"layers": [{"mixer": {"wq": w}}]}]}
+    lora = {"stages": [{"layers": [{"mixer": {"wq": {
+        "a": jax.random.normal(ks[1], (8, rank)),
+        "b": jax.random.normal(ks[2], (rank, 8)),
+        "mask": jnp.ones(())}}}]}]}
+    eff = apply_lora(params, lora, pc)
+    x = jax.random.normal(ks[3], (4, 8))
+    got = x @ eff["stages"][0]["layers"][0]["mixer"]["wq"]
+    l = lora["stages"][0]["layers"][0]["mixer"]["wq"]
+    want = x @ w + 2.0 * (x @ l["a"]) @ l["b"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(st.floats(0.0, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_head_sparsity_mask_fraction(sparsity):
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.models.peft import head_sparsity_mask
+    from repro.sharding import MeshCtx
+    cfg = get_config("gpt2-small").reduced()
+    model = Model(cfg, meshctx=MeshCtx.single_device())
+    params = model.init(jax.random.PRNGKey(0))
+    mask = head_sparsity_mask(params, cfg, sparsity, seed=0)
+    wq_mask = trees.flatten(mask)["stages/0/layers/0/mixer/wq"]
+    frac = float(np.asarray(wq_mask).mean())
+    n_keep = max(1, int(round(cfg.n_heads * (1.0 - sparsity))))
+    assert abs(frac - n_keep / cfg.n_heads) < 1e-6
