@@ -1,0 +1,154 @@
+"""FL cohort-engine benchmark: legacy looped per-client rounds vs the fused
+vmapped round step (``core/cohort.py``), across cohort sizes.
+
+The workload is the PFTT-shaped local objective (frozen reduced-roberta base,
+trainable adapters + classifier head, AdamW) — the repo's FL hot path.  Per
+round the legacy path issues ``n_clients × local_steps`` jitted dispatches
+plus eager per-leaf aggregation ops; the engine issues ONE.  Emits
+``name,us_per_call,derived`` CSV rows and writes the JSON record
+(``BENCH_fl_engine.json``) that tracks the perf trajectory across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import trees
+from repro.configs import get_config
+from repro.core.aggregation import fedavg
+from repro.core.cohort import build_supervised_round
+from repro.models import Model
+from repro.models import peft as peft_mod
+from repro.optim import adamw
+from repro.sharding import MeshCtx
+from repro.wireless import RayleighChannel
+
+
+def _build_workload(n_clients: int, *, d_model=16, seq_len=16, batch=2,
+                    local_steps=5, seed=0):
+    mcfg = get_config("roberta-base").reduced(d_model=d_model, repeats=2)
+    model = Model(mcfg, meshctx=MeshCtx.single_device())
+    key = jax.random.PRNGKey(seed)
+    peft_cfg = peft_mod.PEFTConfig(adapter_dim=8,
+                                   lora_targets=("mixer/wq", "mixer/wv"))
+    params = peft_mod.init_adapters(key, model.init(key), mcfg, peft_cfg)
+    pred = lambda p: peft_mod.is_adapter_path(p) or p.startswith("cls_head")
+
+    opt = adamw(1e-3)
+
+    def local_step(tr, op, b):
+        def loss_fn(t):
+            return model.cls_loss(trees.merge(params, t), b)[0]
+        loss, g = jax.value_and_grad(loss_fn)(tr)
+        upd, op = opt.update(g, op, tr)
+        return trees.tree_add(tr, upd), op, loss
+
+    trainable = trees.select(params, pred)
+    states = [(trainable, opt.init(trainable)) for _ in range(n_clients)]
+
+    rng = np.random.RandomState(seed)
+    tokens = rng.randint(0, mcfg.vocab_size,
+                         (n_clients, local_steps, batch, seq_len))
+    labels = rng.randint(0, mcfg.n_classes, (n_clients, local_steps, batch))
+    batches = {"tokens": tokens.astype(np.int32),
+               "label": labels.astype(np.int32)}
+    weights = RayleighChannel(seed=seed).outage_weights(
+        np.random.RandomState(seed + 1).exponential(1.0, n_clients))
+    if weights.sum() == 0:
+        weights[0] = 1.0
+    return local_step, pred, states, batches, weights, local_steps
+
+
+def _run_loop_round(local_step_jit, pred, states, batches, weights, steps,
+                    counter):
+    n = len(states)
+    for ci in range(n):
+        tr, op = states[ci]
+        for s in range(steps):
+            b = {k: jnp.asarray(v[ci, s]) for k, v in batches.items()}
+            tr, op, _ = local_step_jit(tr, op, b)
+            counter[0] += 1
+        states[ci] = (tr, op)
+    alive = [ci for ci in range(n) if weights[ci] > 0]
+    if alive:
+        agg = fedavg([trees.select(states[ci][0], pred) for ci in alive])
+        counter[0] += 1
+        states[:] = [(trees.merge(tr, agg), op) for tr, op in states]
+    jax.block_until_ready([tr for tr, _ in states])
+    return states
+
+
+def bench_cohort(n_clients: int, *, rounds=3, **kw):
+    local_step, pred, states, batches, weights, steps = _build_workload(
+        n_clients, **kw)
+
+    # --- legacy: one jitted dispatch per client per local step
+    local_step_jit = jax.jit(local_step)
+    counter = [0]
+    loop_states = list(states)
+    _run_loop_round(local_step_jit, pred, loop_states, batches, weights,
+                    steps, counter)                       # warmup/compile
+    loop_dispatches = counter[0]
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        _run_loop_round(local_step_jit, pred, loop_states, batches, weights,
+                        steps, counter)
+    loop_s = (time.perf_counter() - t0) / rounds
+
+    # --- fused: vmap(clients) x scan(local steps) + stacked aggregation,
+    # donated stacked state -> ONE dispatch per round.  The per-round
+    # host-stack + device transfer stays INSIDE the timed region so the
+    # comparison charges both paths their real data-movement cost (the
+    # engine path in run_pftt pays stack_host_batches every round).
+    round_step = build_supervised_round(local_step, pred)
+    st_tr = trees.stack([tr for tr, _ in states])
+    st_op = trees.stack([op for _, op in states])
+    w = jnp.asarray(weights)
+    st_tr, st_op, _ = round_step(                               # warmup
+        st_tr, st_op, {k: jnp.asarray(v) for k, v in batches.items()}, w)
+    jax.block_until_ready(st_tr)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        dev_batches = {k: jnp.asarray(v) for k, v in batches.items()}
+        st_tr, st_op, _ = round_step(st_tr, st_op, dev_batches, w)
+    jax.block_until_ready(st_tr)
+    fused_s = (time.perf_counter() - t0) / rounds
+
+    return {"n_clients": n_clients, "local_steps": steps,
+            "loop_ms_per_round": loop_s * 1e3,
+            "fused_ms_per_round": fused_s * 1e3,
+            "speedup": loop_s / fused_s,
+            "dispatches_loop_per_round": loop_dispatches,
+            "dispatches_fused_per_round": 1}
+
+
+def main(quick: bool = True, out: str = "BENCH_fl_engine.json"):
+    cohorts = (4, 16, 64)
+    rounds = 3 if quick else 10
+    results = []
+    for n in cohorts:
+        r = bench_cohort(n, rounds=rounds)
+        results.append(r)
+        print(f"fl_round_fused_n{n},{r['fused_ms_per_round'] * 1e3:.1f},"
+              f"loop={r['loop_ms_per_round']:.1f}ms "
+              f"speedup={r['speedup']:.2f}x "
+              f"dispatches {r['dispatches_loop_per_round']}->1")
+    record = {"profile": "quick" if quick else "full",
+              "workload": "pftt-shaped adapters+head local SGD, "
+                          "reduced roberta d16, batch 2, seq 16 "
+                          "(dispatch-bound cohort-scaling regime)",
+              "results": results}
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {out}")
+    return record
+
+
+if __name__ == "__main__":
+    main(quick=not bool(os.environ.get("FULL")))

@@ -13,8 +13,11 @@ from repro.configs.base import SparseAttnConfig
 
 
 def _time(fn, *args, n=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    res = fn(*args)                     # single warmup/compile call
+    if isinstance(res, tuple):
+        res[0].block_until_ready()
+    else:
+        jax.block_until_ready(res)
     t0 = time.perf_counter()
     for _ in range(n):
         jax.block_until_ready(fn(*args))

@@ -18,7 +18,7 @@ def main() -> None:
                     default=bool(os.environ.get("FULL")))
     ap.add_argument("--only", default=None,
                     choices=[None, "table1", "fig4", "fig5", "kernels",
-                             "roofline"])
+                             "roofline", "fl_engine"])
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -32,6 +32,11 @@ def main() -> None:
         print("\n# === kernel microbench (interpret mode; CSV: name,us_per_call,derived) ===")
         from benchmarks import kernel_bench
         kernel_bench.main()
+
+    if args.only in (None, "fl_engine"):
+        print("\n# === FL cohort engine: looped vs fused vmapped rounds ===")
+        from benchmarks import fl_engine_bench
+        fl_engine_bench.main(quick=quick, out="BENCH_fl_engine.json")
 
     if args.only in (None, "fig5"):
         print("\n# === Fig. 5: PFTT accuracy / communication ===")

@@ -1,50 +1,78 @@
 """Federated aggregation operators.
 
-* ``fedavg``          — weighted mean of full client trees.
-* ``partial_fedavg``  — the paper's PFTT aggregation: only leaves selected by
-  a path predicate (the universal adapters) are averaged; everything else
-  keeps the global value (local LoRA is never uploaded).
-* ``masked_fedavg``   — PFIT's sparse-layer aggregation: elementwise masks
-  (last-2-layers × head-sparsity × channel outage) weight each client's
-  contribution; where no client contributes, the global value is kept.
+Two API layers over one math core:
+
+* **Stacked** (the cohort-engine hot path, jit/vmap friendly): client trees
+  carry a leading client axis on every leaf and outage/selection is a
+  per-client *weight vector* instead of a Python-filtered list —
+  ``fedavg_stacked``, ``masked_fedavg_stacked``, ``partial_fedavg_stacked``.
+* **List** (legacy convenience API, kept for callers that hold per-client
+  trees): ``fedavg``, ``partial_fedavg``, ``masked_fedavg``.  These stack
+  their inputs and dispatch to the same stacked core, so both layers are
+  bit-identical by construction.
+
+The per-leaf weighted mean is a single ``jnp.tensordot`` over the client
+axis (no per-client Python accumulation), with the dtype-preserving cast of
+the original implementation.
 
 On a TPU deployment these are ``psum``s over the ("pod","data") axes — see
 ``launch/steps.py::make_fl_round_step`` for the collective formulation proven by the dry-run.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import trees
 
 
-def fedavg(client_trees: Sequence, weights: Optional[Sequence[float]] = None):
-    n = len(client_trees)
+def _client_weights(n: int, weights) -> jnp.ndarray:
+    """Normalized (n,) float32 weight vector; uniform when ``weights`` is
+    None.  Zero entries model outages; an all-zero vector is the caller's
+    signal to keep the previous global (guarded, never a NaN)."""
     if weights is None:
-        weights = [1.0 / n] * n
-    w = np.asarray(weights, np.float32)
-    w = w / w.sum()
-
-    def avg(*leaves):
-        out = leaves[0].astype(jnp.float32) * w[0]
-        for wi, leaf in zip(w[1:], leaves[1:]):
-            out = out + leaf.astype(jnp.float32) * wi
-        return out.astype(leaves[0].dtype)
-
-    return jax.tree_util.tree_map(avg, *client_trees)
+        w = jnp.full((n,), 1.0 / n, jnp.float32)
+    else:
+        w = jnp.asarray(weights, jnp.float32)
+        w = w / jnp.maximum(w.sum(), 1e-12)
+    return w
 
 
-def partial_fedavg(global_tree, client_trees: Sequence,
-                   pred: Callable[[str], bool],
-                   weights: Optional[Sequence[float]] = None):
+def _weighted_mean(stacked_leaf, w):
+    """(n, *S) leaf × (n,) weights → (*S), f32 accumulation, dtype kept."""
+    out = jnp.tensordot(w, stacked_leaf.astype(jnp.float32), axes=1)
+    return out.astype(stacked_leaf.dtype)
+
+
+def _pad_mask(m, ndim: int):
+    """Right-pad a stacked mask (n, ...) with singleton dims so it broadcasts
+    leading-aligned against a stacked leaf of rank ``ndim`` (matches the
+    legacy per-client ``broadcast_to(m, leaf.shape)`` semantics)."""
+    return m.reshape(m.shape + (1,) * (ndim - m.ndim))
+
+
+# ---------------------------------------------------------------------------
+# stacked API (cohort engine)
+# ---------------------------------------------------------------------------
+
+
+def fedavg_stacked(stacked_tree, weights=None):
+    """Weighted mean over the leading client axis of every leaf."""
+    leaves = jax.tree_util.tree_leaves(stacked_tree)
+    if not leaves:
+        return stacked_tree
+    w = _client_weights(leaves[0].shape[0], weights)
+    return jax.tree_util.tree_map(lambda l: _weighted_mean(l, w), stacked_tree)
+
+
+def partial_fedavg_stacked(global_tree, stacked_tree,
+                           pred: Callable[[str], bool], weights=None):
     """Aggregate only leaves whose path satisfies ``pred``; others keep the
-    global value."""
-    avg = fedavg(client_trees, weights)
-    flat_avg = trees.flatten(avg)
+    global value.  ``stacked_tree`` may be a selected subtree (None leaves
+    elsewhere) or the full stacked tree."""
+    flat_avg = trees.flatten(fedavg_stacked(stacked_tree, weights))
 
     def pick(path, g):
         return flat_avg[path] if (pred(path) and path in flat_avg) else g
@@ -52,19 +80,79 @@ def partial_fedavg(global_tree, client_trees: Sequence,
     return trees.map_with_path(pick, global_tree)
 
 
-def masked_fedavg(global_tree, client_trees: Sequence, masks: Sequence):
-    """Elementwise: θ_g ← Σ_i m_i·θ_i / Σ_i m_i, keeping θ_g where Σm = 0.
-    ``masks`` are 1/0 float trees (broadcastable to leaves)."""
-    def agg(g, *pairs):
-        half = len(pairs) // 2
-        thetas, ms = pairs[:half], pairs[half:]
-        num = jnp.zeros(g.shape, jnp.float32)
-        den = jnp.zeros(g.shape, jnp.float32)
-        for t, m in zip(thetas, ms):
-            mm = jnp.broadcast_to(m.astype(jnp.float32), g.shape)
-            num = num + mm * t.astype(jnp.float32)
-            den = den + mm
-        avg = num / jnp.maximum(den, 1.0)
+def masked_fedavg_stacked(global_tree, stacked_tree, stacked_masks,
+                          weights=None):
+    """Elementwise θ_g ← Σ_i w_i·m_i·θ_i / Σ_i w_i·m_i, keeping θ_g where the
+    denominator is zero.  ``stacked_masks`` are 1/0 float trees with the same
+    leading client axis (leading-aligned broadcast against each leaf);
+    ``weights`` is the outage/selection vector (None → all clients count)."""
+    leaves = jax.tree_util.tree_leaves(stacked_tree)
+    n = leaves[0].shape[0]
+    if weights is None:
+        w = jnp.ones((n,), jnp.float32)
+    else:
+        w = jnp.asarray(weights, jnp.float32)
+
+    def agg(g, t, m):
+        wm = _pad_mask(w, t.ndim) * _pad_mask(m.astype(jnp.float32), t.ndim)
+        num = (wm * t.astype(jnp.float32)).sum(0)
+        den = jnp.broadcast_to(wm, t.shape).sum(0)
+        # guard only the den==0 lanes (kept-global anyway); clamping with
+        # maximum(den, 1) would silently mis-scale fractional weights
+        avg = num / jnp.where(den > 0, den, 1.0)
         return jnp.where(den > 0, avg, g.astype(jnp.float32)).astype(g.dtype)
 
-    return jax.tree_util.tree_map(agg, global_tree, *client_trees, *masks)
+    return jax.tree_util.tree_map(agg, global_tree, stacked_tree,
+                                  stacked_masks)
+
+
+def broadcast_merge_stacked(stacked_tree, global_tree, stacked_masks=None,
+                            gate=None):
+    """Fused broadcast-back: each client resumes from the global value on its
+    masked entries (``m > 0``), keeping local values elsewhere.  With
+    ``stacked_masks=None`` every aggregated leaf is overwritten.  ``gate`` is
+    an optional scalar (e.g. "any client survived the uplink"); when it is
+    falsy the merge is a no-op, mirroring the legacy skip-on-all-outage."""
+    def put(loc, glob, m=None):
+        bc = jnp.broadcast_to(glob[None].astype(loc.dtype), loc.shape)
+        out = bc if m is None else jnp.where(
+            jnp.broadcast_to(_pad_mask(m, loc.ndim), loc.shape) > 0, bc, loc)
+        if gate is not None:
+            out = jnp.where(gate, out, loc)
+        return out
+
+    if stacked_masks is None:
+        return jax.tree_util.tree_map(put, stacked_tree, global_tree)
+    return jax.tree_util.tree_map(put, stacked_tree, global_tree,
+                                  stacked_masks)
+
+
+# ---------------------------------------------------------------------------
+# list API (legacy convenience; same core → bit-identical)
+# ---------------------------------------------------------------------------
+
+
+def fedavg(client_trees: Sequence, weights: Optional[Sequence[float]] = None):
+    return fedavg_stacked(trees.stack(client_trees), weights)
+
+
+def partial_fedavg(global_tree, client_trees: Sequence,
+                   pred: Callable[[str], bool],
+                   weights: Optional[Sequence[float]] = None):
+    """Aggregate only leaves whose path satisfies ``pred``; others keep the
+    global value."""
+    return partial_fedavg_stacked(global_tree, trees.stack(client_trees),
+                                  pred, weights)
+
+
+def masked_fedavg(global_tree, client_trees: Sequence, masks: Sequence):
+    """Elementwise: θ_g ← Σ_i m_i·θ_i / Σ_i m_i, keeping θ_g where Σm = 0.
+    ``masks`` are 1/0 float trees (broadcastable to leaves).  Masks are
+    broadcast trailing-aligned against each leaf (numpy rules) BEFORE
+    stacking, so any legacy-legal mask rank is accepted; the stacked API
+    expects leading-aligned (n, ...) masks instead."""
+    bmasks = [jax.tree_util.tree_map(
+        lambda m, t: jnp.broadcast_to(m, t.shape), m, t)
+        for m, t in zip(masks, client_trees)]
+    return masked_fedavg_stacked(global_tree, trees.stack(client_trees),
+                                 trees.stack(bmasks))

@@ -12,10 +12,18 @@ Fig. 4 baselines as method variants:
 * ``sfl``      — single reward model (helpfulness only), 20 % sparsity
 * ``pfl``      — personalized double reward, NO sparsity
 * ``shepherd`` — federated LoRA instruction tuning (supervised, no RLHF) [4]
+
+Execution goes through the vmapped cohort engine (``core/cohort.py``): the
+whole round — vmapped PPO (rollout, double reward, clipped updates under
+per-client gradient masks), masked stacked aggregation with the outage
+weight vector, and the masked broadcast-back — is ONE jitted program.
+``PFITConfig(engine=False)`` keeps the legacy per-client loop (parity
+oracle + benchmark baseline).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List
 
 import jax
@@ -25,6 +33,8 @@ import numpy as np
 from repro import trees
 from repro.configs import get_config
 from repro.core.aggregation import fedavg, masked_fedavg
+from repro.core.cohort import (build_ppo_round, build_supervised_round,
+                               stack_host_batches)
 from repro.core.rewards import ClientPreference, DoubleReward
 from repro.data.partition import client_topic_preferences
 from repro.data.synthetic import InstructionCorpus, N_TOPICS
@@ -62,6 +72,7 @@ class PFITConfig:
     snr_db: float = 5.0
     seed: int = 0
     verbose: bool = False
+    engine: bool = True            # fused vmapped round step (cohort engine)
     ppo: PPOConfig = PPOConfig()
 
 
@@ -84,7 +95,7 @@ def _pretrain_policy(key, model, params, corpus, steps, lr, batch, verbose):
     st = opt.init(params)
     rng = np.random.RandomState(7)
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step_fn(params, st, batch_d):
         def loss_fn(p):
             return model.lm_loss(p, batch_d)
@@ -170,9 +181,9 @@ def run_pfit(cfg: PFITConfig) -> Dict:
         clients.append(state)
     global_params = params
 
-    # ---- shepherd supervised step
-    @jax.jit
-    def shepherd_step(lora, opt_state, batch):
+    # ---- shepherd supervised step (unjitted; legacy path jits it, the
+    # cohort engine vmaps it)
+    def shepherd_local_step(lora, opt_state, batch):
         def loss_fn(lo):
             eff = peft_mod.apply_lora(global_params, lo, peft_cfg)
             return model.lm_loss(eff, batch)
@@ -180,17 +191,21 @@ def run_pfit(cfg: PFITConfig) -> Dict:
         upd, opt_state = opt.update(g, opt_state, lora)
         return trees.tree_add(lora, upd), opt_state, loss
 
+    shepherd_step = jax.jit(shepherd_local_step)
+
     channel = RayleighChannel(mean_snr_db=cfg.snr_db, seed=cfg.seed)
     ledger = CommLedger()
     reward_curve = []
 
-    # ---- jitted hot paths (built once; calls below don't retrace)
+    # ---- hot paths: personalized double-reward quality + PPO phases
+    def quality_fn(toks, mask, ah, asafe):
+        return (ah * rm_h.score(rm_h_params, toks, mask)
+                + asafe * rm_s.score(rm_s_params, toks, mask))
+
     ppo_trainer = PPOTrainer(model, opt, cfg.ppo, cfg.prompt_len)
     gen_jit = jax.jit(lambda p, prompts, k, temp: generate(
         model, p, prompts, cfg.gen_len, k, temperature=temp))
-    quality_jit = jax.jit(lambda toks, mask, ah, asafe:
-                          ah * rm_h.score(rm_h_params, toks, mask)
-                          + asafe * rm_s.score(rm_s_params, toks, mask))
+    quality_jit = jax.jit(quality_fn)
     l2_jit = jax.jit(trees.tree_l2)
 
     # fixed eval prompt sets per client (reduces round-to-round variance)
@@ -213,70 +228,130 @@ def run_pfit(cfg: PFITConfig) -> Dict:
                                           prefs[ci].alpha_safe).mean()))
         return float(np.mean(vals))
 
+    # ---- cohort engine: the whole round is one fused jitted step
+    use_engine = cfg.engine
+    if use_engine:
+        if cfg.method == "shepherd":
+            round_step = build_supervised_round(shepherd_local_step)
+            cohort_tr = trees.stack([cl["lora"] for cl in clients])
+            cohort_opt = trees.stack([cl["opt_state"] for cl in clients])
+            payloads = [tree_bytes(cl["lora"]) for cl in clients]
+        else:
+            ppo_round_step = build_ppo_round(
+                model, opt, cfg.ppo, cfg.prompt_len, cfg.gen_len, quality_fn,
+                lambda_regs=[p.lambda_reg for p in prefs])
+            cohort_tr = trees.stack([cl["params"] for cl in clients])
+            cohort_opt = trees.stack([cl["opt_state"] for cl in clients])
+            st_masks = trees.stack(client_masks)
+            alphas_h = jnp.asarray([p.alpha_help for p in prefs])
+            alphas_s = jnp.asarray([p.alpha_safe for p in prefs])
+            payloads = [tree_bytes(clients[ci]["params"],
+                                   nonzero_mask=client_masks[ci])
+                        for ci in range(cfg.n_clients)]
+
     for rnd in range(cfg.rounds):
         gains = channel.realize(cfg.n_clients)
         reports = []
-        for ci, cl in enumerate(clients):
+        if use_engine:
+            reports = [channel.uplink(payloads[ci], gain=gains[ci])
+                       for ci in range(cfg.n_clients)]
+            weights = jnp.asarray(channel.outage_weights(gains))
             if cfg.method == "shepherd":
-                for _ in range(cfg.shepherd_steps):
+                def shepherd_batch(ci):
                     s = corpus.sample(cfg.rollout_batch,
                                       topic_probs=topic_prefs[ci],
                                       helpful_p=0.9, unsafe_p=0.05, rng=rng)
-                    toks = jnp.asarray(s["tokens"])
-                    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
-                             "mask": jnp.asarray(s["mask"][:, 1:])}
-                    cl["lora"], cl["opt_state"], _ = shepherd_step(
-                        cl["lora"], cl["opt_state"], batch)
-                reports.append(channel.uplink(tree_bytes(cl["lora"]),
-                                              gain=gains[ci]))
-                continue
-
-            # --- PPO with the personalized reward
-            s = corpus.sample(cfg.rollout_batch, topic_probs=topic_prefs[ci],
-                              rng=rng)
-            prompts = jnp.asarray(s["tokens"][:, :cfg.prompt_len])
-            toks = gen_jit(cl["params"], prompts,
-                           jax.random.fold_in(key, rnd * 17 + ci),
-                           cfg.ppo.temperature)
-            mask = jnp.concatenate(
-                [jnp.zeros((toks.shape[0], cfg.prompt_len)),
-                 jnp.ones((toks.shape[0], cfg.gen_len))], axis=1)
-            reward = quality_jit(toks, mask, prefs[ci].alpha_help,
-                                 prefs[ci].alpha_safe)
-            if prefs[ci].lambda_reg > 0:
-                reg = l2_jit(
-                    trees.select(cl["params"],
-                                 lambda p: p.startswith("stages")),
-                    trees.select(global_params,
-                                 lambda p: p.startswith("stages")))
-                reward = reward - prefs[ci].lambda_reg * reg
-            cl["params"], cl["opt_state"], _ = ppo_trainer.round(
-                cl["params"], global_params, cl["opt_state"],
-                toks, reward, grad_mask=client_masks[ci])
-            reports.append(channel.uplink(
-                tree_bytes(cl["params"], nonzero_mask=client_masks[ci]),
-                gain=gains[ci]))
-        ledger.log_round(reports)
-
-        # --- aggregation
-        alive = [ci for ci, r in enumerate(reports) if not r.outage]
-        if alive:
-            if cfg.method == "shepherd":
-                agg = fedavg([clients[ci]["lora"] for ci in alive])
-                for cl in clients:
-                    cl["lora"] = agg
-                global_eff = peft_mod.merge_lora(global_params, agg, peft_cfg)
+                    return {"tokens": s["tokens"][:, :-1],
+                            "labels": s["tokens"][:, 1:],
+                            "mask": s["mask"][:, 1:]}
+                batches = stack_host_batches(
+                    [[shepherd_batch(ci) for _ in range(cfg.shepherd_steps)]
+                     for ci in range(cfg.n_clients)])
+                cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
+                                                      batches, weights)
+                for cl, lo in zip(clients,
+                                  trees.unstack(cohort_tr, cfg.n_clients)):
+                    cl["lora"] = lo
             else:
-                global_params = masked_fedavg(
-                    global_params,
-                    [clients[ci]["params"] for ci in alive],
-                    [client_masks[ci] for ci in alive])
-                # broadcast: clients resume from global on masked entries
-                for ci, cl in enumerate(clients):
-                    cl["params"] = jax.tree_util.tree_map(
-                        lambda loc, glob, m: jnp.where(
-                            jnp.broadcast_to(m, loc.shape) > 0, glob, loc),
-                        cl["params"], global_params, client_masks[ci])
+                prompts = jnp.asarray(np.stack(
+                    [corpus.sample(cfg.rollout_batch,
+                                   topic_probs=topic_prefs[ci],
+                                   rng=rng)["tokens"][:, :cfg.prompt_len]
+                     for ci in range(cfg.n_clients)]))
+                keys = jnp.stack([jax.random.fold_in(key, rnd * 17 + ci)
+                                  for ci in range(cfg.n_clients)])
+                (cohort_tr, cohort_opt, global_params, _,
+                 _) = ppo_round_step(cohort_tr, cohort_opt, global_params,
+                                     st_masks, prompts, keys, alphas_h,
+                                     alphas_s, weights)
+                for cl, p in zip(clients,
+                                 trees.unstack(cohort_tr, cfg.n_clients)):
+                    cl["params"] = p
+            ledger.log_round(reports)
+            # (aggregation + broadcast already fused into the round step)
+        else:
+            for ci, cl in enumerate(clients):
+                if cfg.method == "shepherd":
+                    for _ in range(cfg.shepherd_steps):
+                        s = corpus.sample(cfg.rollout_batch,
+                                          topic_probs=topic_prefs[ci],
+                                          helpful_p=0.9, unsafe_p=0.05,
+                                          rng=rng)
+                        toks = jnp.asarray(s["tokens"])
+                        batch = {"tokens": toks[:, :-1],
+                                 "labels": toks[:, 1:],
+                                 "mask": jnp.asarray(s["mask"][:, 1:])}
+                        cl["lora"], cl["opt_state"], _ = shepherd_step(
+                            cl["lora"], cl["opt_state"], batch)
+                    reports.append(channel.uplink(tree_bytes(cl["lora"]),
+                                                  gain=gains[ci]))
+                    continue
+
+                # --- PPO with the personalized reward
+                s = corpus.sample(cfg.rollout_batch,
+                                  topic_probs=topic_prefs[ci], rng=rng)
+                prompts = jnp.asarray(s["tokens"][:, :cfg.prompt_len])
+                toks = gen_jit(cl["params"], prompts,
+                               jax.random.fold_in(key, rnd * 17 + ci),
+                               cfg.ppo.temperature)
+                mask = jnp.concatenate(
+                    [jnp.zeros((toks.shape[0], cfg.prompt_len)),
+                     jnp.ones((toks.shape[0], cfg.gen_len))], axis=1)
+                reward = quality_jit(toks, mask, prefs[ci].alpha_help,
+                                     prefs[ci].alpha_safe)
+                if prefs[ci].lambda_reg > 0:
+                    reg = l2_jit(
+                        trees.select(cl["params"],
+                                     lambda p: p.startswith("stages")),
+                        trees.select(global_params,
+                                     lambda p: p.startswith("stages")))
+                    reward = reward - prefs[ci].lambda_reg * reg
+                cl["params"], cl["opt_state"], _ = ppo_trainer.round(
+                    cl["params"], global_params, cl["opt_state"],
+                    toks, reward, grad_mask=client_masks[ci])
+                reports.append(channel.uplink(
+                    tree_bytes(cl["params"], nonzero_mask=client_masks[ci]),
+                    gain=gains[ci]))
+            ledger.log_round(reports)
+
+            # --- aggregation
+            alive = [ci for ci, r in enumerate(reports) if not r.outage]
+            if alive:
+                if cfg.method == "shepherd":
+                    agg = fedavg([clients[ci]["lora"] for ci in alive])
+                    for cl in clients:
+                        cl["lora"] = agg
+                else:
+                    global_params = masked_fedavg(
+                        global_params,
+                        [clients[ci]["params"] for ci in alive],
+                        [client_masks[ci] for ci in alive])
+                    # broadcast: clients resume from global on masked entries
+                    for ci, cl in enumerate(clients):
+                        cl["params"] = jax.tree_util.tree_map(
+                            lambda loc, glob, m: jnp.where(
+                                jnp.broadcast_to(m, loc.shape) > 0, glob, loc),
+                            cl["params"], global_params, client_masks[ci])
 
         if cfg.method == "shepherd":
             cur = [peft_mod.merge_lora(global_params, clients[ci]["lora"],

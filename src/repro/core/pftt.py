@@ -12,10 +12,18 @@ personalization.  Baselines from the paper's Fig. 5 are method variants:
 
 Every round runs over a simulated Rayleigh uplink (outage → the client's
 update is dropped that round) and is logged to a CommLedger (bytes + delay).
+
+Execution goes through the vmapped cohort engine (``core/cohort.py``): one
+fused jitted round step (vmap over clients of a scan over local steps +
+stacked aggregation + broadcast) instead of O(n_clients × local_steps)
+dispatches.  ``PFTTConfig(engine=False)`` keeps the legacy per-client loop
+(parity oracle + benchmark baseline); ragged cohorts (clients with unequal
+batch shapes) fall back to it automatically.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional
 
 import jax
@@ -23,8 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import trees
-from repro.configs import get_config
 from repro.core.aggregation import fedavg
+from repro.core.cohort import build_supervised_round, stack_host_batches
+from repro.configs import get_config
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import batch_iterator
 from repro.data.synthetic import ClassificationCorpus
@@ -57,6 +66,7 @@ class PFTTConfig:
     snr_db: float = 5.0
     seed: int = 0
     verbose: bool = False
+    engine: bool = True            # fused vmapped round step (cohort engine)
 
 
 def _upload_pred(method: str):
@@ -125,7 +135,7 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
     opt_pre = adamw(cfg.pretrain_lr)
     from repro.data.synthetic import SPECIAL
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def pre_step(params, opt_state, batch):
         def loss_fn(p):
             return model.lm_loss(p, batch)
@@ -159,14 +169,15 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
     all_data = corpus.sample(cfg.samples_per_client * cfg.n_clients, rng=rng)
     parts = dirichlet_partition(all_data["label"], cfg.n_clients,
                                 cfg.dirichlet_alpha, seed=cfg.seed)
-    client_train, client_test, client_iters = [], [], []
+    client_train, client_test, client_iters, client_batch_sizes = [], [], [], []
     for ci, idx in enumerate(parts):
         cut = max(1, int(len(idx) * 0.8))
         tr = {k: v[idx[:cut]] for k, v in all_data.items()}
         te = {k: v[idx[cut:]] for k, v in all_data.items()}
         client_train.append(tr)
         client_test.append(te)
-        client_iters.append(batch_iterator(tr, min(cfg.batch, max(2, len(idx[:cut]))),
+        client_batch_sizes.append(min(cfg.batch, max(2, len(idx[:cut]))))
+        client_iters.append(batch_iterator(tr, client_batch_sizes[-1],
                                            seed=cfg.seed + ci))
 
     # ---- per-client trainable state
@@ -182,7 +193,6 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
 
     frozen = params
 
-    @jax.jit
     def local_step(trainable, opt_state, batch):
         def loss_fn(t):
             eff = _merge_trainable(cfg.method, frozen, t, peft_cfg)
@@ -190,6 +200,8 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
         loss, g = jax.value_and_grad(loss_fn)(trainable)
         upd, opt_state = opt.update(g, opt_state, trainable)
         return trees.tree_add(trainable, upd), opt_state, loss
+
+    local_step_jit = jax.jit(local_step)     # legacy per-client path
 
     @jax.jit
     def eval_acc(trainable, tokens, label):
@@ -210,22 +222,49 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
             return tree_bytes(shared) + act
         return tree_bytes(shared)
 
+    # uniform batch shapes → one fused round step; ragged cohorts keep the
+    # legacy per-client loop (vmap needs a common stacked shape)
+    use_engine = cfg.engine and len(set(client_batch_sizes)) == 1
+    if use_engine:
+        round_step = build_supervised_round(local_step, upload_pred)
+        cohort_tr = trees.stack([cl["trainable"] for cl in clients])
+        cohort_opt = trees.stack([cl["opt_state"] for cl in clients])
+        payloads = [payload_bytes(cl["trainable"]) for cl in clients]
+
+    def _unstack_into_clients():
+        for cl, tr in zip(clients, trees.unstack(cohort_tr, cfg.n_clients)):
+            cl["trainable"] = tr
+
     for rnd in range(cfg.rounds):
         gains = channel.realize(cfg.n_clients)
         reports = []
-        for ci, cl in enumerate(clients):
-            for _ in range(cfg.local_steps):
-                batch = {k: jnp.asarray(v) for k, v in
-                         next(client_iters[ci]).items()}
-                cl["trainable"], cl["opt_state"], loss = local_step(
-                    cl["trainable"], cl["opt_state"], batch)
-            reports.append(channel.uplink(payload_bytes(cl["trainable"]),
-                                          gain=gains[ci]))
+        if use_engine:
+            # host side: draw the round's batches in the legacy (client,
+            # step) order, stack, and run ONE compiled round step
+            batches = stack_host_batches(
+                [[next(client_iters[ci]) for _ in range(cfg.local_steps)]
+                 for ci in range(cfg.n_clients)])
+            reports = [channel.uplink(payloads[ci], gain=gains[ci])
+                       for ci in range(cfg.n_clients)]
+            weights = jnp.asarray(channel.outage_weights(gains))
+            cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
+                                                  batches, weights)
+            _unstack_into_clients()
+        else:
+            for ci, cl in enumerate(clients):
+                for _ in range(cfg.local_steps):
+                    batch = {k: jnp.asarray(v) for k, v in
+                             next(client_iters[ci]).items()}
+                    cl["trainable"], cl["opt_state"], loss = local_step_jit(
+                        cl["trainable"], cl["opt_state"], batch)
+                reports.append(channel.uplink(payload_bytes(cl["trainable"]),
+                                              gain=gains[ci]))
         ledger.log_round(reports)
 
-        # --- aggregation over surviving clients (partial for pftt)
+        # --- aggregation over surviving clients (partial for pftt); in the
+        # engine path this already happened inside the fused round step
         alive = [ci for ci, r in enumerate(reports) if not r.outage]
-        if alive:
+        if alive and not use_engine:
             shared_trees = [trees.select(clients[ci]["trainable"], upload_pred)
                             for ci in alive]
             agg = fedavg(shared_trees)

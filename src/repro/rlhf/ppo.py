@@ -64,48 +64,55 @@ def gae(rewards, values, mask, gamma: float, lam: float):
     return adv, adv + values
 
 
+def make_ppo_fns(model, opt, cfg: PPOConfig, prompt_len: int):
+    """Unjitted (prep, step) pair — PPOTrainer jits them for the per-client
+    loop; the cohort engine vmaps them over a stacked client axis instead."""
+
+    def prep(params, ref_params, tokens, terminal_reward):
+        resp_mask = (jnp.arange(tokens.shape[1] - 1)[None]
+                     >= prompt_len - 1).astype(jnp.float32)
+        resp_mask = jnp.broadcast_to(resp_mask, tokens[:, 1:].shape)
+        old_logp, old_values, _ = seq_logprobs_values(model, params, tokens)
+        ref_logp, _, _ = seq_logprobs_values(model, ref_params, tokens)
+        kl = old_logp - ref_logp
+        rewards = -cfg.kl_coef * kl * resp_mask
+        rewards = rewards.at[:, -1].add(terminal_reward)
+        adv, ret = gae(rewards, old_values, resp_mask, cfg.gamma, cfg.lam)
+        adv = (adv - adv.mean()) / jnp.maximum(adv.std(), 1e-6)
+        mean_kl = (kl * resp_mask).sum() / resp_mask.sum()
+        return old_logp, adv, ret, resp_mask, mean_kl
+
+    def step(params, opt_state, tokens, old_logp, adv, ret, resp_mask,
+             grad_mask):
+        def loss_fn(p):
+            logp, values, ent = seq_logprobs_values(model, p, tokens)
+            ratio = jnp.exp(logp - old_logp)
+            unclipped = ratio * adv
+            clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * adv
+            denom = resp_mask.sum()
+            pg = -(jnp.minimum(unclipped, clipped) * resp_mask).sum() / denom
+            vf = (jnp.square(values - ret) * resp_mask).sum() / denom
+            en = (ent * resp_mask).sum() / denom
+            return pg + cfg.vf_coef * vf - cfg.ent_coef * en, (pg, vf, en)
+
+        (loss, auxes), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if grad_mask is not None:
+            grads = jax.tree_util.tree_map(
+                lambda g, m: g * jnp.asarray(m, g.dtype), grads, grad_mask)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return trees.tree_add(params, updates), opt_state, loss, auxes
+
+    return prep, step
+
+
 class PPOTrainer:
     def __init__(self, model, opt, cfg: PPOConfig, prompt_len: int):
         self.model = model
         self.opt = opt
         self.cfg = cfg
         self.prompt_len = prompt_len
-
-        def prep(params, ref_params, tokens, terminal_reward):
-            resp_mask = (jnp.arange(tokens.shape[1] - 1)[None]
-                         >= prompt_len - 1).astype(jnp.float32)
-            resp_mask = jnp.broadcast_to(resp_mask, tokens[:, 1:].shape)
-            old_logp, old_values, _ = seq_logprobs_values(model, params, tokens)
-            ref_logp, _, _ = seq_logprobs_values(model, ref_params, tokens)
-            kl = old_logp - ref_logp
-            rewards = -cfg.kl_coef * kl * resp_mask
-            rewards = rewards.at[:, -1].add(terminal_reward)
-            adv, ret = gae(rewards, old_values, resp_mask, cfg.gamma, cfg.lam)
-            adv = (adv - adv.mean()) / jnp.maximum(adv.std(), 1e-6)
-            mean_kl = (kl * resp_mask).sum() / resp_mask.sum()
-            return old_logp, adv, ret, resp_mask, mean_kl
-
-        def step(params, opt_state, tokens, old_logp, adv, ret, resp_mask,
-                 grad_mask):
-            def loss_fn(p):
-                logp, values, ent = seq_logprobs_values(model, p, tokens)
-                ratio = jnp.exp(logp - old_logp)
-                unclipped = ratio * adv
-                clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * adv
-                denom = resp_mask.sum()
-                pg = -(jnp.minimum(unclipped, clipped) * resp_mask).sum() / denom
-                vf = (jnp.square(values - ret) * resp_mask).sum() / denom
-                en = (ent * resp_mask).sum() / denom
-                return pg + cfg.vf_coef * vf - cfg.ent_coef * en, (pg, vf, en)
-
-            (loss, auxes), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params)
-            if grad_mask is not None:
-                grads = jax.tree_util.tree_map(
-                    lambda g, m: g * jnp.asarray(m, g.dtype), grads, grad_mask)
-            updates, opt_state = opt.update(grads, opt_state, params)
-            return trees.tree_add(params, updates), opt_state, loss, auxes
-
+        prep, step = make_ppo_fns(model, opt, cfg, prompt_len)
         self._prep = jax.jit(prep)
         self._step = jax.jit(step)
 

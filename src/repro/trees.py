@@ -1,11 +1,12 @@
 """Pytree path utilities: flatten to '/'-joined path dicts, select subtrees
-by predicate, merge — the substrate for PEFT splits and federated partial
-aggregation."""
+by predicate, merge, stack along a client axis — the substrate for PEFT
+splits, federated partial aggregation, and the vmapped cohort engine."""
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -47,6 +48,21 @@ def merge(base, overlay):
 def mask_like(tree, pred: Callable[[str], bool]):
     """1.0/0.0 float mask tree by path predicate."""
     return map_with_path(lambda p, v: float(pred(p)), tree)
+
+
+def stack(client_trees: Sequence):
+    """Stack same-structure trees along a NEW leading client axis per leaf:
+    n trees of leaf shape S → one tree of leaf shape (n, *S).  The stacked
+    form is what the cohort engine vmaps over."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *client_trees)
+
+
+def unstack(stacked, n: Optional[int] = None) -> List:
+    """Inverse of ``stack``: split the leading client axis back into a list
+    of per-client trees (device-side slices, no host transfer)."""
+    if n is None:
+        n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    return [jax.tree_util.tree_map(lambda l: l[i], stacked) for i in range(n)]
 
 
 def count_params(tree) -> int:

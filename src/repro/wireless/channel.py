@@ -38,12 +38,27 @@ class RayleighChannel:
         """Per-client |h|² draws for one round."""
         return self._rng.exponential(1.0, size=n_clients)
 
+    def snr(self, gain):
+        """Gain draw(s) → (snr_db, snr_linear); scalar or vectorized — the
+        ONE place the fading → SNR mapping lives (``uplink`` and
+        ``outage_weights`` must agree on it)."""
+        snr_lin = 10 ** (self.mean_snr_db / 10.0) * np.asarray(gain)
+        snr_db = 10 * np.log10(np.maximum(snr_lin, 1e-12))
+        return snr_db, snr_lin
+
+    def outage_weights(self, gains: np.ndarray) -> np.ndarray:
+        """Vectorized 1/0 alive-weight vector for one round of ``gains`` —
+        the cohort engine's aggregation weights (0 = outage, the client's
+        update is dropped from the weighted mean).  Same decision as the
+        per-client ``uplink``."""
+        snr_db, _ = self.snr(gains)
+        return (snr_db >= self.outage_snr_db).astype(np.float32)
+
     def uplink(self, payload_bytes: int, gain: Optional[float] = None
                ) -> ChannelReport:
         if gain is None:
             gain = float(self._rng.exponential(1.0))
-        snr_lin = 10 ** (self.mean_snr_db / 10.0) * gain
-        snr_db = 10 * np.log10(max(snr_lin, 1e-12))
+        snr_db, snr_lin = self.snr(gain)
         rate = self.bandwidth_hz * np.log2(1.0 + snr_lin)
         outage = snr_db < self.outage_snr_db
         delay = np.inf if outage else payload_bytes * 8.0 / max(rate, 1.0)

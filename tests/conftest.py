@@ -1,0 +1,47 @@
+"""Shared test fixtures/shims.
+
+``hypothesis`` is an optional dependency: the property tests in
+``test_properties.py`` / ``test_async_agg.py`` use it when available, but
+the offline container does not ship it.  Rather than failing both modules
+at collection (which also hides their plain, non-property tests), install a
+minimal stand-in that turns every ``@given`` test into a skipped placeholder
+while leaving the rest of the module runnable.
+"""
+import sys
+import types
+
+try:
+    import hypothesis  # noqa: F401  (real library present — nothing to do)
+except ImportError:
+    import pytest
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stands in for any strategy expression built at import time."""
+        def __call__(self, *_a, **_k):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda _name: _AnyStrategy()
+
+    shim = types.ModuleType("hypothesis")
+    shim.given = given
+    shim.settings = settings
+    shim.strategies = strategies
+    sys.modules["hypothesis"] = shim
+    sys.modules["hypothesis.strategies"] = strategies
