@@ -72,11 +72,20 @@ def main():
 
     from repro.kernels.lora_fused.ops import lora_matmul
     from repro.kernels.lora_fused.ref import lora_ref
+    from repro.models.peft import lora_proj
     kl = jax.random.split(jax.random.PRNGKey(2), 4)
     xm = jax.random.normal(kl[0], (512, 512))
     w = jax.random.normal(kl[1], (512, 512)) * 0.05
     am = jax.random.normal(kl[2], (512, 16)) * 0.05
     bm2 = jax.random.normal(kl[3], (16, 512)) * 0.05
+    rows.append(("lora_merged_dense_jnp", _time(jax.jit(
+        lambda x, wg, a, b: x @ (wg + 2.0 * a @ b)), xm, w, am, bm2),
+        "materialize W+sAB then matmul"))
+    rows.append(("lora_factored_jnp", _time(jax.jit(
+        lambda x, wg, a, b: lora_proj(x, wg, {"a": a, "b": b,
+                                              "mask": jnp.ones(())},
+                                      scale=2.0)), xm, w, am, bm2),
+        "x@W + s(x@A)@B via peft.lora_proj"))
     rows.append(("lora_two_matmul_jnp", _time(jax.jit(
         lambda *t: lora_ref(*t, scale=2.0)), xm, w, am, bm2), "unfused"))
     rows.append(("lora_fused_pallas_interpret", _time(

@@ -1,0 +1,181 @@
+"""Merged vs factored LoRA execution under the vmapped cohort engine.
+
+The workload is the fedlora-shaped PFTT hot path: a frozen reduced-roberta
+base, per-client trainable = rank-r LoRA factors, one fused vmapped round
+step per round (``core/cohort.py``).  The MERGED path materializes
+``W + (α/r)·A·B`` inside every loss evaluation, so vmap batches the merged
+weights and every client carries a full per-client copy of every targeted
+base weight; the FACTORED path (``peft.lora_proj``) threads the factors as
+a side channel, keeping the base unbatched/broadcast.
+
+Per cohort size (4, 16, 64) this reports, for both paths:
+* wall-clock per fused round (same round count, compile-once),
+* compiled peak memory (XLA ``memory_analysis``: temp + argument bytes),
+* analytic per-round FLOPs (``launch.jaxpr_cost.step_flops``),
+and a parity block: PFTT accuracy / PFIT(shepherd) reward curves of
+factored vs the merged oracle over ≥3 rounds.  Writes
+``BENCH_lora_path.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import trees
+from repro.configs import get_config
+from repro.core.cohort import build_supervised_round
+from repro.launch.jaxpr_cost import step_flops
+from repro.models import Model
+from repro.models import peft as peft_mod
+from repro.optim import adamw
+from repro.sharding import MeshCtx
+
+
+def _build_workload(n_clients: int, *, d_model=128, seq_len=16, batch=2,
+                    local_steps=3, rank=8, seed=0):
+    mcfg = get_config("roberta-base").reduced(d_model=d_model, repeats=2)
+    model = Model(mcfg, meshctx=MeshCtx.single_device())
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    peft_cfg = peft_mod.PEFTConfig(
+        lora_rank=rank,
+        lora_targets=("mixer/wq", "mixer/wk", "mixer/wv", "mixer/wo"))
+    scale = peft_mod.lora_scale(peft_cfg)
+    opt = adamw(1e-3, update_mask=lambda p: not p.endswith("/mask"))
+
+    def local_step_factored(tr, op, b):
+        def loss_fn(t):
+            return model.cls_loss(params, b, lora=t["lora"],
+                                  lora_scale=scale)[0]
+        loss, g = jax.value_and_grad(loss_fn)(tr)
+        upd, op = opt.update(g, op, tr)
+        return trees.tree_add(tr, upd), op, loss
+
+    def local_step_merged(tr, op, b):
+        def loss_fn(t):
+            eff = peft_mod.apply_lora(params, t["lora"], peft_cfg)
+            return model.cls_loss(eff, b)[0]
+        loss, g = jax.value_and_grad(loss_fn)(tr)
+        upd, op = opt.update(g, op, tr)
+        return trees.tree_add(tr, upd), op, loss
+
+    lora = peft_mod.init_lora(key, params, peft_cfg)
+    tr = {"lora": lora}
+    st_tr = trees.stack([tr] * n_clients)
+    st_op = trees.stack([opt.init(tr)] * n_clients)
+    rng = np.random.RandomState(seed)
+    batches = {
+        "tokens": jnp.asarray(rng.randint(
+            0, mcfg.vocab_size, (n_clients, local_steps, batch, seq_len)),
+            jnp.int32),
+        "label": jnp.asarray(rng.randint(
+            0, mcfg.n_classes, (n_clients, local_steps, batch)), jnp.int32)}
+    weights = jnp.ones((n_clients,))
+    return {"factored": local_step_factored, "merged": local_step_merged}, \
+        st_tr, st_op, batches, weights
+
+
+def _bench_path(local_step, st_tr, st_op, batches, weights, rounds: int):
+    # donate=False: the same stacked state is reused across timing rounds
+    # and by the other path, and the AOT-compiled program is inspectable
+    round_step = build_supervised_round(local_step, donate=False)
+    lowered = round_step.lower(st_tr, st_op, batches, weights)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    peak = int(mem.temp_size_in_bytes + mem.argument_size_in_bytes)
+    flops = step_flops(lambda a, b, c: local_step(a, b, c)[0],
+                       trees.unstack(st_tr, 1)[0],
+                       trees.unstack(st_op, 1)[0],
+                       jax.tree_util.tree_map(lambda x: x[0, 0], batches))
+    # ^ per client per local step (abstract trace, no execution)
+    out = round_step(st_tr, st_op, batches, weights)      # warmup (cached)
+    jax.block_until_ready(out[0])
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        out = round_step(st_tr, st_op, batches, weights)
+    jax.block_until_ready(out[0])
+    return {"ms_per_round": (time.perf_counter() - t0) / rounds * 1e3,
+            "peak_bytes": peak,
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "flops_per_client_step": int(flops)}
+
+
+def _parity_block(full: bool):
+    """Factored vs merged-oracle end-to-end curves (≥3 rounds, fp32).
+    Quick profile checks PFTT; full adds the PFIT shepherd reward curve
+    (reward-model training makes it ~a minute on this CPU)."""
+    from repro.core.pftt import PFTTConfig, run_pftt
+    kw = dict(n_clients=2, rounds=3, local_steps=2, pretrain_steps=10,
+              samples_per_client=120, d_model=32, seed=0)
+    acc_f = run_pftt(PFTTConfig(factored=True, **kw))["acc_per_round"]
+    acc_m = run_pftt(PFTTConfig(factored=False, **kw))["acc_per_round"]
+    block = {
+        "pftt_acc_factored": acc_f, "pftt_acc_merged": acc_m,
+        "pftt_max_abs_diff": float(np.abs(np.asarray(acc_f)
+                                          - np.asarray(acc_m)).max()),
+    }
+    if not full:
+        return block
+
+    from repro.core.pfit import PFITConfig, run_pfit
+    kw2 = dict(method="shepherd", n_clients=2, rounds=3, shepherd_steps=2,
+               rollout_batch=4, pretrain_steps=10, rm_steps=10, d_model=48,
+               n_layers=2, gen_len=8, prompt_len=6, seed=0)
+    rew_f = run_pfit(PFITConfig(factored=True, **kw2))["reward_per_round"]
+    rew_m = run_pfit(PFITConfig(factored=False, **kw2))["reward_per_round"]
+    block.update({
+        "pfit_shepherd_reward_factored": rew_f,
+        "pfit_shepherd_reward_merged": rew_m,
+        "pfit_max_abs_diff": float(np.abs(np.asarray(rew_f)
+                                          - np.asarray(rew_m)).max()),
+    })
+    return block
+
+
+def main(quick: bool = True, out: str = "BENCH_lora_path.json",
+         parity: bool = True):
+    cohorts = (4, 16) if quick else (4, 16, 64)
+    rounds = 3 if quick else 10
+    results = []
+    for n in cohorts:
+        steps, st_tr, st_op, batches, weights = _build_workload(n)
+        row = {"n_clients": n}
+        for name, ls in steps.items():
+            row[name] = _bench_path(ls, st_tr, st_op, batches, weights,
+                                    rounds)
+        row["mem_ratio"] = row["merged"]["peak_bytes"] / \
+            max(row["factored"]["peak_bytes"], 1)
+        row["speedup"] = row["merged"]["ms_per_round"] / \
+            max(row["factored"]["ms_per_round"], 1e-9)
+        results.append(row)
+        print(f"lora_path_factored_n{n},"
+              f"{row['factored']['ms_per_round'] * 1e3:.1f},"
+              f"merged={row['merged']['ms_per_round']:.1f}ms "
+              f"peak {row['merged']['peak_bytes']:,}->"
+              f"{row['factored']['peak_bytes']:,}B "
+              f"(x{row['mem_ratio']:.2f}) speedup={row['speedup']:.2f}x")
+    record = {"profile": "quick" if quick else "full",
+              "workload": "fedlora-shaped PFTT round: frozen reduced "
+                          "roberta d64 seq16 batch2, rank-4 LoRA on wq/wv, "
+                          "fused vmapped round step, 3 local steps",
+              "results": results}
+    if parity:
+        record["parity"] = _parity_block(full=not quick)
+        msg = f"# parity: pftt max|dacc|={record['parity']['pftt_max_abs_diff']:.2e}"
+        if "pfit_max_abs_diff" in record["parity"]:
+            msg += f" pfit max|drew|={record['parity']['pfit_max_abs_diff']:.2e}"
+        print(msg)
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {out}")
+    return record
+
+
+if __name__ == "__main__":
+    main(quick=not bool(os.environ.get("FULL")))

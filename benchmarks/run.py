@@ -18,7 +18,7 @@ def main() -> None:
                     default=bool(os.environ.get("FULL")))
     ap.add_argument("--only", default=None,
                     choices=[None, "table1", "fig4", "fig5", "kernels",
-                             "roofline", "fl_engine"])
+                             "roofline", "fl_engine", "lora_path"])
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -37,6 +37,11 @@ def main() -> None:
         print("\n# === FL cohort engine: looped vs fused vmapped rounds ===")
         from benchmarks import fl_engine_bench
         fl_engine_bench.main(quick=quick, out="BENCH_fl_engine.json")
+
+    if args.only in (None, "lora_path"):
+        print("\n# === LoRA execution path: merged vs factored under client-vmap ===")
+        from benchmarks import lora_path_bench
+        lora_path_bench.main(quick=quick, out="BENCH_lora_path.json")
 
     if args.only in (None, "fig5"):
         print("\n# === Fig. 5: PFTT accuracy / communication ===")

@@ -1,7 +1,8 @@
 from repro.core.aggregation import (fedavg, fedavg_stacked,  # noqa: F401
                                     masked_fedavg, masked_fedavg_stacked,
                                     partial_fedavg, partial_fedavg_stacked)
-from repro.core.cohort import (build_ppo_round,  # noqa: F401
+from repro.core.cohort import (HostBatchStacker,  # noqa: F401
+                               build_cohort_eval, build_ppo_round,
                                build_supervised_round, stack_host_batches)
 from repro.core.rewards import ClientPreference, DoubleReward  # noqa: F401
 from repro.core.pftt import PFTTConfig, run_pftt  # noqa: F401

@@ -44,13 +44,47 @@ from repro.rlhf.ppo import PPOConfig, make_ppo_fns
 from repro.rlhf.rollout import generate
 
 
+class HostBatchStacker:
+    """Stacks the round's [client][step] host batches into the engine's
+    (n_clients, local_steps, …) layout WITHOUT reallocating: the stacked
+    numpy buffer is allocated once on the first round and refilled in place,
+    then shipped with a single ``jax.device_put`` call per round (one
+    transfer per leaf, no per-(client, step) ``np.stack`` garbage)."""
+
+    def __init__(self):
+        self._bufs = None
+
+    def __call__(self, per_client_batches):
+        nc = len(per_client_batches)
+        ns = len(per_client_batches[0])
+        if self._bufs is None:
+            self._bufs = {
+                k: np.empty((nc, ns) + np.shape(v), np.asarray(v).dtype)
+                for k, v in per_client_batches[0][0].items()}
+        for ci, cb in enumerate(per_client_batches):
+            for si, step in enumerate(cb):
+                for k, v in step.items():
+                    self._bufs[k][ci, si] = v
+        return jax.device_put(self._bufs)
+
+
 def stack_host_batches(per_client_batches):
     """[client][step] list of {name: np.ndarray} → one device dict with
-    leading (n_clients, local_steps) axes — the engine's data layout."""
-    keys = per_client_batches[0][0].keys()
-    return {k: jnp.asarray(np.stack([np.stack([step[k] for step in cb])
-                                     for cb in per_client_batches]))
-            for k in keys}
+    leading (n_clients, local_steps) axes — the engine's data layout.
+    One-shot helper; round loops should hold a ``HostBatchStacker`` to
+    reuse the host buffer across rounds."""
+    return HostBatchStacker()(per_client_batches)
+
+
+def build_cohort_eval(eval_fn: Callable):
+    """Fuse per-client eval into ONE jitted vmapped dispatch per round.
+
+    ``eval_fn(trainable, *per_client_data) -> pytree`` is the UNJITTED
+    single-client eval; every argument is stacked on a leading client axis
+    (ragged test sets are padded to a common shape with a validity mask —
+    the mask rides in as one of the stacked args).  Returns the vmapped
+    jitted cohort eval."""
+    return jax.jit(jax.vmap(eval_fn))
 
 
 def build_supervised_round(local_step_fn: Callable,

@@ -19,6 +19,12 @@ per-client gradient masks), masked stacked aggregation with the outage
 weight vector, and the masked broadcast-back — is ONE jitted program.
 ``PFITConfig(engine=False)`` keeps the legacy per-client loop (parity
 oracle + benchmark baseline).
+
+The shepherd baseline executes its LoRA FACTORED (``peft.lora_proj``):
+training threads the rank-r factors next to the frozen global (unbatched
+under the client-vmap) and eval generation serves the personalized LoRA
+unmerged through prefill + decode.  ``PFITConfig(factored=False)`` keeps
+the merged oracle.
 """
 from __future__ import annotations
 
@@ -33,8 +39,8 @@ import numpy as np
 from repro import trees
 from repro.configs import get_config
 from repro.core.aggregation import fedavg, masked_fedavg
-from repro.core.cohort import (build_ppo_round, build_supervised_round,
-                               stack_host_batches)
+from repro.core.cohort import (HostBatchStacker, build_ppo_round,
+                               build_supervised_round)
 from repro.core.rewards import ClientPreference, DoubleReward
 from repro.data.partition import client_topic_preferences
 from repro.data.synthetic import InstructionCorpus, N_TOPICS
@@ -73,6 +79,8 @@ class PFITConfig:
     seed: int = 0
     verbose: bool = False
     engine: bool = True            # fused vmapped round step (cohort engine)
+    factored: bool = True          # unmerged LoRA execution for shepherd
+                                   # train/serve (False → merged oracle)
     ppo: PPOConfig = PPOConfig()
 
 
@@ -182,9 +190,16 @@ def run_pfit(cfg: PFITConfig) -> Dict:
     global_params = params
 
     # ---- shepherd supervised step (unjitted; legacy path jits it, the
-    # cohort engine vmaps it)
+    # cohort engine vmaps it).  Factored: the frozen global stays unbatched
+    # under the engine's client-vmap, only rank-r factors carry the client
+    # axis; merged oracle behind cfg.factored=False.
+    lscale = peft_mod.lora_scale(peft_cfg)
+
     def shepherd_local_step(lora, opt_state, batch):
         def loss_fn(lo):
+            if cfg.factored:
+                return model.lm_loss(global_params, batch, lora=lo,
+                                     lora_scale=lscale)
             eff = peft_mod.apply_lora(global_params, lo, peft_cfg)
             return model.lm_loss(eff, batch)
         loss, g = jax.value_and_grad(loss_fn)(lora)
@@ -205,6 +220,11 @@ def run_pfit(cfg: PFITConfig) -> Dict:
     ppo_trainer = PPOTrainer(model, opt, cfg.ppo, cfg.prompt_len)
     gen_jit = jax.jit(lambda p, prompts, k, temp: generate(
         model, p, prompts, cfg.gen_len, k, temperature=temp))
+    # factored serving: personalized LoRA threaded unmerged through
+    # prefill + every decode step (shepherd eval)
+    gen_lora_jit = jax.jit(lambda p, lo, prompts, k, temp: generate(
+        model, p, prompts, cfg.gen_len, k, temperature=temp, lora=lo,
+        lora_scale=lscale))
     quality_jit = jax.jit(quality_fn)
     l2_jit = jax.jit(trees.tree_l2)
 
@@ -215,12 +235,17 @@ def run_pfit(cfg: PFITConfig) -> Dict:
                           rng=np.random.RandomState(1000 + ci))
         eval_prompts.append(jnp.asarray(s["tokens"][:, :cfg.prompt_len]))
 
-    def eval_reward(client_params_list):
-        """Mean personalized quality reward on the fixed eval prompts."""
+    def eval_reward(client_params_list, loras=None):
+        """Mean personalized quality reward on the fixed eval prompts.
+        ``loras[ci]`` (optional) serves client ci's LoRA unmerged."""
         vals = []
         for ci, p in enumerate(client_params_list):
-            toks = gen_jit(p, eval_prompts[ci],
-                           jax.random.fold_in(key, 999 + ci), 0.8)
+            if loras is not None:
+                toks = gen_lora_jit(p, loras[ci], eval_prompts[ci],
+                                    jax.random.fold_in(key, 999 + ci), 0.8)
+            else:
+                toks = gen_jit(p, eval_prompts[ci],
+                               jax.random.fold_in(key, 999 + ci), 0.8)
             mask = jnp.concatenate(
                 [jnp.zeros((toks.shape[0], cfg.prompt_len)),
                  jnp.ones((toks.shape[0], cfg.gen_len))], axis=1)
@@ -236,6 +261,7 @@ def run_pfit(cfg: PFITConfig) -> Dict:
             cohort_tr = trees.stack([cl["lora"] for cl in clients])
             cohort_opt = trees.stack([cl["opt_state"] for cl in clients])
             payloads = [tree_bytes(cl["lora"]) for cl in clients]
+            stacker = HostBatchStacker()
         else:
             ppo_round_step = build_ppo_round(
                 model, opt, cfg.ppo, cfg.prompt_len, cfg.gen_len, quality_fn,
@@ -264,7 +290,7 @@ def run_pfit(cfg: PFITConfig) -> Dict:
                     return {"tokens": s["tokens"][:, :-1],
                             "labels": s["tokens"][:, 1:],
                             "mask": s["mask"][:, 1:]}
-                batches = stack_host_batches(
+                batches = stacker(
                     [[shepherd_batch(ci) for _ in range(cfg.shepherd_steps)]
                      for ci in range(cfg.n_clients)])
                 cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
@@ -354,11 +380,17 @@ def run_pfit(cfg: PFITConfig) -> Dict:
                             cl["params"], global_params, client_masks[ci])
 
         if cfg.method == "shepherd":
-            cur = [peft_mod.merge_lora(global_params, clients[ci]["lora"],
-                                       peft_cfg) for ci in range(cfg.n_clients)]
+            if cfg.factored:   # serve unmerged: base broadcast, factors tiny
+                reward_curve.append(eval_reward(
+                    [global_params] * cfg.n_clients,
+                    loras=[cl["lora"] for cl in clients]))
+            else:
+                reward_curve.append(eval_reward(
+                    [peft_mod.merge_lora(global_params, clients[ci]["lora"],
+                                         peft_cfg)
+                     for ci in range(cfg.n_clients)]))
         else:
-            cur = [cl["params"] for cl in clients]
-        reward_curve.append(eval_reward(cur))
+            reward_curve.append(eval_reward([cl["params"] for cl in clients]))
         if cfg.verbose:
             print(f"[pfit:{cfg.method}] round {rnd} reward "
                   f"{reward_curve[-1]:.4f} bytes {ledger.rounds[-1]['bytes']:,}")

@@ -19,6 +19,14 @@ stacked aggregation + broadcast) instead of O(n_clients × local_steps)
 dispatches.  ``PFTTConfig(engine=False)`` keeps the legacy per-client loop
 (parity oracle + benchmark baseline); ragged cohorts (clients with unequal
 batch shapes) fall back to it automatically.
+
+LoRA executes FACTORED by default (``peft.lora_proj``): the loss threads
+the rank-r factor tree next to the params, so under the client-vmap the
+frozen base stays unbatched — memory/FLOPs scale as n_clients × rank-r
+factors, not n_clients × full weights.  ``PFTTConfig(factored=False)`` is
+the merged oracle.  Per-round eval pads every client's test set to one
+validity-masked shape and scores the stacked cohort in ONE jitted vmapped
+dispatch (``core/cohort.py::build_cohort_eval``).
 """
 from __future__ import annotations
 
@@ -32,7 +40,8 @@ import numpy as np
 
 from repro import trees
 from repro.core.aggregation import fedavg
-from repro.core.cohort import build_supervised_round, stack_host_batches
+from repro.core.cohort import (HostBatchStacker, build_cohort_eval,
+                               build_supervised_round)
 from repro.configs import get_config
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import batch_iterator
@@ -67,6 +76,8 @@ class PFTTConfig:
     seed: int = 0
     verbose: bool = False
     engine: bool = True            # fused vmapped round step (cohort engine)
+    factored: bool = True          # unmerged LoRA execution (False → merged
+                                   # parity oracle: materialize W + sAB)
 
 
 def _upload_pred(method: str):
@@ -99,17 +110,26 @@ def _build_trainable(method: str, params, lora):
     raise ValueError(method)
 
 
-def _merge_trainable(method: str, base_params, trainable, peft_cfg):
-    """Materialize effective params from (frozen base, trainable)."""
-    lora = None
+def _split_trainable(method: str, base_params, trainable):
+    """(effective params WITHOUT lora merged, unmerged lora tree) — the
+    factored-path contract: the base (and non-lora trainables merged into
+    it) stays a broadcastable tree under the engine's client-vmap; only the
+    returned rank-r factor tree carries the client axis."""
     if method == "pftt":
-        full = trees.merge(base_params, trainable["shared"])
-        lora = trainable["local"].get("lora")
-    elif method in ("vanilla_fl", "fedlora"):
-        full = trees.merge(base_params, trainable["shared"]["base"])
-        lora = trainable["shared"]["lora"]
-    else:  # fedbert
-        full = trees.merge(base_params, trainable["shared"])
+        return (trees.merge(base_params, trainable["shared"]),
+                trainable["local"].get("lora"))
+    if method in ("vanilla_fl", "fedlora"):
+        return (trees.merge(base_params, trainable["shared"]["base"]),
+                trainable["shared"]["lora"])
+    if method == "fedbert":
+        return trees.merge(base_params, trainable["shared"]), None
+    raise ValueError(method)
+
+
+def _merge_trainable(method: str, base_params, trainable, peft_cfg):
+    """Materialize effective params from (frozen base, trainable) — the
+    MERGED parity oracle (``PFTTConfig(factored=False)``)."""
+    full, lora = _split_trainable(method, base_params, trainable)
     if lora is not None:
         full = peft_mod.apply_lora(full, lora, peft_cfg)
     return full
@@ -192,22 +212,60 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
         clients.append({"trainable": t, "opt_state": opt.init(t)})
 
     frozen = params
+    scale = peft_mod.lora_scale(peft_cfg)
+
+    def _effective(t):
+        """(params, lora, lora_scale) per the factored/merged flag."""
+        if cfg.factored:
+            full, lora = _split_trainable(cfg.method, frozen, t)
+            return full, lora, scale
+        return _merge_trainable(cfg.method, frozen, t, peft_cfg), None, 1.0
 
     def local_step(trainable, opt_state, batch):
         def loss_fn(t):
-            eff = _merge_trainable(cfg.method, frozen, t, peft_cfg)
-            return model.cls_loss(eff, batch)[0]
+            full, lora, ls = _effective(t)
+            return model.cls_loss(full, batch, lora=lora, lora_scale=ls)[0]
         loss, g = jax.value_and_grad(loss_fn)(trainable)
         upd, opt_state = opt.update(g, opt_state, trainable)
         return trees.tree_add(trainable, upd), opt_state, loss
 
     local_step_jit = jax.jit(local_step)     # legacy per-client path
 
-    @jax.jit
-    def eval_acc(trainable, tokens, label):
-        eff = _merge_trainable(cfg.method, frozen, trainable, peft_cfg)
-        _, acc = model.cls_loss(eff, {"tokens": tokens, "label": label})
-        return acc
+    # ---- engine-side eval: every client's test set padded to one common
+    # shape (validity-masked) and the WHOLE stacked cohort scored in ONE
+    # jitted vmapped dispatch per round — O(1) dispatches regardless of
+    # cohort size (and no per-test-set-shape retraces)
+    max_test = max([len(te["label"]) for te in client_test] + [1])
+    seq = client_test[0]["tokens"].shape[1]
+    t_toks = np.zeros((cfg.n_clients, max_test, seq), np.int32)
+    t_labels = np.zeros((cfg.n_clients, max_test), np.int32)
+    t_valid = np.zeros((cfg.n_clients, max_test), np.float32)
+    for ci, te in enumerate(client_test):
+        n = len(te["label"])
+        t_toks[ci, :n] = te["tokens"]
+        t_labels[ci, :n] = te["label"]
+        t_valid[ci, :n] = 1.0
+    t_toks, t_labels, t_valid = (jnp.asarray(t_toks), jnp.asarray(t_labels),
+                                 jnp.asarray(t_valid))
+
+    def eval_client(trainable, tokens, label, valid):
+        full, lora, ls = _effective(trainable)
+        hidden, _ = model.forward(full, tokens, lora=lora, lora_scale=ls)
+        pred = (hidden[:, 0] @ full["cls_head"]).astype(jnp.float32).argmax(-1)
+        correct = (pred == label).astype(jnp.float32) * valid
+        return correct.sum(), valid.sum()
+
+    eval_cohort = build_cohort_eval(eval_client)
+    eval_dispatches = [0]
+
+    def eval_round_accs(stacked_trainable):
+        """Per-client accuracies — one fused dispatch for the whole cohort
+        (clients with an empty test set are dropped, as in the legacy
+        per-client loop)."""
+        eval_dispatches[0] += 1
+        corr, cnt = eval_cohort(stacked_trainable, t_toks, t_labels, t_valid)
+        corr, cnt = np.asarray(corr), np.asarray(cnt)
+        return [float(c / n) for c, n in zip(corr, cnt) if n > 0]
 
     channel = RayleighChannel(mean_snr_db=cfg.snr_db, seed=cfg.seed)
     ledger = CommLedger()
@@ -230,6 +288,7 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
         cohort_tr = trees.stack([cl["trainable"] for cl in clients])
         cohort_opt = trees.stack([cl["opt_state"] for cl in clients])
         payloads = [payload_bytes(cl["trainable"]) for cl in clients]
+        stacker = HostBatchStacker()   # host buffer reused round-over-round
 
     def _unstack_into_clients():
         for cl, tr in zip(clients, trees.unstack(cohort_tr, cfg.n_clients)):
@@ -240,8 +299,9 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
         reports = []
         if use_engine:
             # host side: draw the round's batches in the legacy (client,
-            # step) order, stack, and run ONE compiled round step
-            batches = stack_host_batches(
+            # step) order into the preallocated stacked buffer, one
+            # device_put, and run ONE compiled round step
+            batches = stacker(
                 [[next(client_iters[ci]) for _ in range(cfg.local_steps)]
                  for ci in range(cfg.n_clients)])
             reports = [channel.uplink(payloads[ci], gain=gains[ci])
@@ -271,14 +331,9 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
             for cl in clients:
                 cl["trainable"] = trees.merge(cl["trainable"], agg)
 
-        accs = []
-        for ci, cl in enumerate(clients):
-            te = client_test[ci]
-            if len(te["label"]) == 0:
-                continue
-            accs.append(float(eval_acc(cl["trainable"],
-                                       jnp.asarray(te["tokens"]),
-                                       jnp.asarray(te["label"]))))
+        accs = eval_round_accs(
+            cohort_tr if use_engine
+            else trees.stack([cl["trainable"] for cl in clients]))
         accs_per_round.append(float(np.mean(accs)))
         if cfg.verbose and rnd % 5 == 0:
             print(f"[pftt:{cfg.method}] round {rnd} acc {accs_per_round[-1]:.3f} "
@@ -292,4 +347,5 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
         "mean_round_bytes": ledger.mean_round_bytes,
         "mean_round_delay_s": ledger.mean_round_delay,
         "total_bytes": ledger.total_bytes,
+        "eval_dispatches_per_round": eval_dispatches[0] / max(cfg.rounds, 1),
     }

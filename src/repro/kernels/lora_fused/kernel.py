@@ -42,14 +42,27 @@ def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
         o_ref[...] = (acc_ref[...] + scale * lora).astype(o_ref.dtype)
 
 
+def _block(dim: int, pref: int) -> int:
+    """Largest usable block ≤ pref that tiles ``dim`` exactly; falls back to
+    the whole dim (fine in interpret mode / small models) so the kernel
+    accepts the model's real projection shapes, not only 128-multiples."""
+    if dim <= pref:
+        return dim
+    if dim % pref == 0:
+        return pref
+    for cand in range(pref, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
 def lora_fused_kernel(x, w, a, b, *, scale: float, bm: int = 128,
                       bn: int = 128, bk: int = 128, interpret: bool = True):
     """x: (M, K); w: (K, N); a: (K, r); b: (r, N) → (M, N)."""
     m, k = x.shape
     _, n = w.shape
     r = a.shape[1]
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
     nm, nn, nk = m // bm, n // bn, k // bk
 
     kernel = functools.partial(_kernel, scale=scale, n_k=nk)

@@ -1,4 +1,12 @@
-"""Public wrapper for the fused LoRA projection (PFTT serving hot path)."""
+"""Public wrapper for the fused LoRA projection (PFTT serving hot path).
+
+This is the serving lowering of the factored LoRA contract: model code
+reaches it through ``peft.lora_proj(..., backend="pallas")`` (threaded via
+``Model.*(opts={"lora_backend": "pallas"})``), computing the unmerged form
+``x·W + scale·(x·A)·B`` in one fused pass.  Forward-only — ``pallas_call``
+has no VJP here, so training keeps the jnp factored path; the kernel picks
+compatible block sizes for the model's real (non-128-aligned) projection
+shapes."""
 from __future__ import annotations
 
 import functools

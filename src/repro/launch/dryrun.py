@@ -35,7 +35,8 @@ from repro.launch.steps import (make_fl_round_step, make_input_batch_shapes,
                                 make_serve_step, make_train_step)
 from repro.models import Model
 from repro.models import peft as peft_mod
-from repro.sharding import batch_specs, cache_specs, param_specs, with_specs
+from repro.sharding import (batch_specs, cache_specs, param_specs,
+                            use_mesh, with_specs)
 
 COLLECTIVE_RE = re.compile(
     r"(\w+\[[^\]]*\](?:\s*,\s*\w+\[[^\]]*\])*)\s*"
@@ -180,7 +181,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, step: str = "auto",
         opt_in = {"mu": with_specs(opt_shapes["mu"], ospecs, mesh),
                   "nu": with_specs(opt_shapes["nu"], ospecs, mesh),
                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step_fn).lower(params_in, opt_in, batch_in)
         lower_args = (step_fn, (params_in, opt_in, batch_in), 0)
     elif step == "train_peft":
@@ -203,13 +204,13 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, step: str = "auto",
         opt_in = {"mu": with_specs(opt_shapes["mu"], tspecs, mesh),
                   "nu": with_specs(opt_shapes["nu"], tspecs, mesh),
                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step_fn).lower(trainable_in, frozen_in, opt_in,
                                              batch_in)
         lower_args = (step_fn, (trainable_in, frozen_in, opt_in, batch_in), 0)
     elif step == "prefill":
         step_fn = make_prefill_step(model, cache_len=shape.seq_len, impl=impl)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step_fn).lower(params_in, batch_in)
         cache_b = sds_tree_bytes(model.cache_spec(shape.global_batch,
                                                   shape.seq_len))
@@ -224,7 +225,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, step: str = "auto",
             jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
             batch_specs(meshctx, jax.ShapeDtypeStruct(
                 (shape.global_batch, 1), jnp.int32)), mesh)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step_fn).lower(params_in, cache_in, tok_in)
         lower_args = (step_fn, (params_in, cache_in, tok_in),
                       sds_tree_bytes(cache_shapes))
@@ -263,7 +264,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, step: str = "auto",
         opt_in = {"mu": with_specs(opt_shapes["mu"], tspecs, mesh),
                   "nu": with_specs(opt_shapes["nu"], tspecs, mesh),
                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step_fn).lower(trainable_in, frozen_in, opt_in,
                                              batch_in)
         lower_args = (step_fn, (trainable_in, frozen_in, opt_in, batch_in), 0)

@@ -5,6 +5,7 @@ per-client LoRA (PFTT personalized serving).
         --batch 4 --prompt-len 32 --gen 32
 """
 import argparse
+import functools
 import time
 
 import jax
@@ -26,6 +27,10 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--lora-rank", type=int, default=0,
                     help="serve with a random personalized LoRA (PFTT mode)")
+    ap.add_argument("--lora-merge", action="store_true",
+                    help="legacy: bake the LoRA into the base weights "
+                         "(default serves factored/unmerged via the fused "
+                         "Pallas projection)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -33,14 +38,23 @@ def main():
         cfg = cfg.reduced()
     if cfg.is_encoder_only:
         raise SystemExit("encoder-only architectures have no decode path")
-    model = Model(cfg, meshctx=MeshCtx.single_device())
+    serve_factored = bool(args.lora_rank) and not args.lora_merge
+    model = Model(cfg, meshctx=MeshCtx.single_device(),
+                  opts={"lora_backend": "pallas"} if serve_factored else None)
     key = jax.random.PRNGKey(0)
     params = model.init(key, max_seq=args.prompt_len + args.gen)
+    lora, lscale = None, 1.0
     if args.lora_rank:
         pc = peft_mod.PEFTConfig(lora_rank=args.lora_rank)
         lora = peft_mod.init_lora(key, params, pc)
-        params = peft_mod.merge_lora(params, lora, pc)
-        print(f"serving with merged client LoRA (rank {args.lora_rank})")
+        lscale = peft_mod.lora_scale(pc)
+        if args.lora_merge:
+            params = peft_mod.merge_lora(params, lora, pc)
+            lora = None
+            print(f"serving with merged client LoRA (rank {args.lora_rank})")
+        else:
+            print(f"serving UNMERGED client LoRA (rank {args.lora_rank}, "
+                  f"fused Pallas lowering): base stays shared")
 
     rng = np.random.RandomState(0)
     kw = {}
@@ -53,10 +67,12 @@ def main():
     prompts = jnp.asarray(rng.randint(6, cfg.vocab_size,
                                       size=(args.batch, args.prompt_len)))
 
-    decode = jax.jit(model.decode_step)
+    decode = jax.jit(functools.partial(model.decode_step, lora=lora,
+                                       lora_scale=lscale))
     t0 = time.time()
     logits, cache = model.prefill(params, prompts,
-                                  cache_len=args.prompt_len + args.gen, **kw)
+                                  cache_len=args.prompt_len + args.gen,
+                                  lora=lora, lora_scale=lscale, **kw)
     print(f"prefill: {time.time()-t0:.2f}s "
           f"({args.batch}×{args.prompt_len} tokens)")
     t0 = time.time()

@@ -63,13 +63,22 @@ def make_train_step(model: Model, lr: float = 1e-4, impl: Optional[str] = None):
 
 
 def make_peft_step(model: Model, peft_cfg: peft_mod.PEFTConfig,
-                   lr: float = 1e-3, impl: Optional[str] = None):
-    """Paper-faithful PFTT local step: trainable = {adapters, lora}."""
+                   lr: float = 1e-3, impl: Optional[str] = None,
+                   factored: bool = True):
+    """Paper-faithful PFTT local step: trainable = {adapters, lora}.
+
+    ``factored`` (default) threads the LoRA factors through the forward
+    unmerged (``peft.lora_proj``) — the dense delta is never formed;
+    ``factored=False`` keeps the merged oracle."""
     opt = adamw(lr)
+    scale = peft_mod.lora_scale(peft_cfg)
 
     def peft_step(trainable, frozen, opt_state, batch):
         def loss_fn(t):
             full = trees.merge(frozen, t["adapters"])
+            if factored:
+                return model.lm_loss(full, batch, impl=impl, lora=t["lora"],
+                                     lora_scale=scale)
             eff = peft_mod.apply_lora(full, t["lora"], peft_cfg)
             return model.lm_loss(eff, batch, impl=impl)
         loss, grads = jax.value_and_grad(loss_fn)(trainable)
@@ -96,7 +105,7 @@ def make_serve_step(model: Model, impl: Optional[str] = None):
 
 def make_fl_round_step(model: Model, peft_cfg: peft_mod.PEFTConfig,
                        n_clients: int, lr: float = 1e-3,
-                       impl: Optional[str] = None):
+                       impl: Optional[str] = None, factored: bool = True):
     """One federated PFTT round as a single SPMD program.
 
     trainable = {"adapters": shared subtree (no client dim),
@@ -107,13 +116,23 @@ def make_fl_round_step(model: Model, peft_cfg: peft_mod.PEFTConfig,
     the client/batch dim is sharded over ("pod","data"): the adapter-grad
     reduction lowers to the cross-pod all-reduce that *is* the paper's
     communication step, and its payload is exactly the adapter subtree.
-    """
+
+    ``factored`` (default) runs the LoRA path unmerged under the vmap, so
+    the frozen base + adapters stay UNBATCHED (broadcast) and per-client
+    state is just the rank-r factors — the memory/FLOP enabler for large
+    cohorts; ``factored=False`` materializes the per-client merged weights
+    (oracle)."""
     opt = adamw(lr)
+    scale = peft_mod.lora_scale(peft_cfg)
 
     def fl_round_step(trainable, frozen, opt_state, batch):
         def loss_fn(t):
+            full = trees.merge(frozen, t["adapters"])
+
             def client_loss(lora_c, batch_c):
-                full = trees.merge(frozen, t["adapters"])
+                if factored:
+                    return model.lm_loss(full, batch_c, impl=impl,
+                                         lora=lora_c, lora_scale=scale)
                 eff = peft_mod.apply_lora(full, lora_c, peft_cfg)
                 return model.lm_loss(eff, batch_c, impl=impl)
             losses = jax.vmap(client_loss)(t["lora"], batch)

@@ -14,7 +14,7 @@ import numpy as np
 from repro.configs import get_config, list_configs
 from repro.launch.steps import make_train_step
 from repro.models import Model
-from repro.sharding import MeshCtx, batch_specs, param_specs
+from repro.sharding import MeshCtx, batch_specs, param_specs, use_mesh
 
 
 def main():
@@ -52,7 +52,7 @@ def main():
     rng = np.random.RandomState(0)
     jstep = jax.jit(step_fn)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         for i in range(args.steps):
             toks = jnp.asarray(rng.randint(6, cfg.vocab_size,
                                            size=(args.batch, args.seq + 1)))

@@ -23,6 +23,7 @@ from repro.models import ssm as ssm_mod
 from repro.models.mlp import init_mlp, mlp
 from repro.models.moe import init_moe, moe_ffn, moe_ffn_a2a
 from repro.models.norms import apply_norm
+from repro.models.peft import LoraProj, merge_factors
 from repro.models.rope import apply_rope
 from repro.sharding import MeshCtx
 
@@ -40,6 +41,23 @@ class LayerCtx:
     pos: Any = None           # decode: traced scalar write position
     causal: bool = True
     opts: dict = dataclasses.field(default_factory=dict)  # §Perf knobs
+    lora_scale: float = 1.0   # α/r for factored LoRA side-channel trees
+
+
+def _sub(lora, *keys):
+    """Navigate a lora side-channel subtree; None anywhere → None."""
+    for k in keys:
+        if lora is None:
+            return None
+        lora = lora.get(k)
+    return lora
+
+
+def _proj(x, w, lf, ctx: LayerCtx):
+    """LoRA-aware projection: factored ``LoraProj`` when factors ride
+    along, plain matmul otherwise."""
+    return LoraProj(w, lf, ctx.lora_scale,
+                    ctx.opts.get("lora_backend", "jnp"))(x)
 
 
 # ---------------------------------------------------------------------------
@@ -93,12 +111,18 @@ def init_layer(key, cfg: ModelConfig, kind: LayerKind, dtype):
 # ---------------------------------------------------------------------------
 
 
-def _qkv(xn, mp, cfg: ModelConfig, positions, use_rope: bool):
+def _qkv(xn, mp, cfg: ModelConfig, positions, use_rope: bool,
+         lf=None, ctx: Optional[LayerCtx] = None):
     b, s, _ = xn.shape
     h, k_, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = (xn @ mp["wq"]).reshape(b, s, h, hd)
-    k = (xn @ mp["wk"]).reshape(b, s, k_, hd)
-    v = (xn @ mp["wv"]).reshape(b, s, k_, hd)
+    if lf is None or ctx is None:
+        q = (xn @ mp["wq"]).reshape(b, s, h, hd)
+        k = (xn @ mp["wk"]).reshape(b, s, k_, hd)
+        v = (xn @ mp["wv"]).reshape(b, s, k_, hd)
+    else:
+        q = _proj(xn, mp["wq"], _sub(lf, "wq"), ctx).reshape(b, s, h, hd)
+        k = _proj(xn, mp["wk"], _sub(lf, "wk"), ctx).reshape(b, s, k_, hd)
+        v = _proj(xn, mp["wv"], _sub(lf, "wv"), ctx).reshape(b, s, k_, hd)
     if use_rope and cfg.pos == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -128,65 +152,80 @@ def _attn_core_seq(q, k, v, kind: LayerKind, cfg: ModelConfig, ctx: LayerCtx):
 # ---------------------------------------------------------------------------
 
 
-def apply_layer_seq(x, lp, kind: LayerKind, ctx: LayerCtx):
+def apply_layer_seq(x, lp, kind: LayerKind, ctx: LayerCtx, lora=None):
     """Returns (x, cache_entry, aux).  cache_entry is the per-layer state to
-    seed a decode cache (k/v, compressed kv, or ssm states)."""
+    seed a decode cache (k/v, compressed kv, or ssm states).  ``lora`` is the
+    layer's factor subtree (mirrors ``lp``; None → dense path)."""
     cfg = ctx.cfg
     xn = apply_norm(x, lp["norm1"], cfg.norm, cfg.norm_eps)
     cache_entry = None
     aux = jnp.zeros((), jnp.float32)
 
     if kind.mixer in ("attn", "local", "enc", "dec"):
-        q, k, v = _qkv(xn, lp["mixer"], cfg, ctx.positions, use_rope=True)
+        mf = _sub(lora, "mixer")
+        q, k, v = _qkv(xn, lp["mixer"], cfg, ctx.positions, use_rope=True,
+                       lf=mf, ctx=ctx)
         y = _attn_core_seq(q, k, v, kind, cfg, ctx)
         b, s = y.shape[:2]
-        x = x + y.reshape(b, s, -1) @ lp["mixer"]["wo"]
+        x = x + _proj(y.reshape(b, s, -1), lp["mixer"]["wo"],
+                      _sub(mf, "wo"), ctx)
         if kind.mixer != "enc":
             cache_entry = {"k": k, "v": v}
         if kind.mixer == "dec":
+            cf = _sub(lora, "cross")
             xn2 = apply_norm(x, lp["norm_x"], cfg.norm, cfg.norm_eps)
-            qx = (xn2 @ lp["cross"]["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+            qx = _proj(xn2, lp["cross"]["wq"], _sub(cf, "wq"),
+                       ctx).reshape(b, s, cfg.n_heads, cfg.hd)
             mem = ctx.memory
-            kx = (mem @ lp["cross"]["wk"]).reshape(
+            kx = _proj(mem, lp["cross"]["wk"], _sub(cf, "wk"), ctx).reshape(
                 mem.shape[0], mem.shape[1], cfg.n_kv_heads, cfg.hd)
-            vx = (mem @ lp["cross"]["wv"]).reshape(
+            vx = _proj(mem, lp["cross"]["wv"], _sub(cf, "wv"), ctx).reshape(
                 mem.shape[0], mem.shape[1], cfg.n_kv_heads, cfg.hd)
             yx = attn.dense_attention(qx, kx, vx, causal=False)
-            x = x + yx.reshape(b, s, -1) @ lp["cross"]["wo"]
+            x = x + _proj(yx.reshape(b, s, -1), lp["cross"]["wo"],
+                          _sub(cf, "wo"), ctx)
             cache_entry["xk"] = kx
             cache_entry["xv"] = vx
     elif kind.mixer == "mla":
+        # mla/mamba internals don't take factors: dense-merge THIS layer's
+        # mixer factors locally (2-D leaves, post-scan) as a fallback
+        mp = merge_factors(lp["mixer"], _sub(lora, "mixer"), ctx.lora_scale)
         impl = ctx.impl if ctx.impl != "auto" else (
             "dense" if x.shape[1] <= 2048 else "chunked")
         y, (ckv, kpe) = mla_mod.mla_seq(
-            xn, lp["mixer"], cfg.mla, cfg.n_heads, ctx.positions,
+            xn, mp, cfg.mla, cfg.n_heads, ctx.positions,
             cfg.rope_theta, cfg.norm_eps, causal=ctx.causal, impl=impl,
             sparse_cfg=cfg.sparse_attn, q_offset=ctx.q_offset,
             causal_skip=ctx.opts.get("causal_skip", False))
         x = x + y
         cache_entry = {"ckv": ckv, "kpe": kpe}
     elif kind.mixer == "mamba":
+        mp = merge_factors(lp["mixer"], _sub(lora, "mixer"), ctx.lora_scale)
         if (ctx.opts.get("mamba_sp") and ctx.mode == "train"
                 and ctx.meshctx is not None):
             # sequence-parallel SSD: activations stay seq-sharded (§Perf B2)
-            x = x + ssm_mod.mamba_seq_sp(xn, lp["mixer"], cfg.ssm,
+            x = x + ssm_mod.mamba_seq_sp(xn, mp, cfg.ssm,
                                          cfg.d_model, cfg.norm_eps,
                                          ctx.meshctx)
         else:
             y, (h_final, conv_state) = ssm_mod.mamba_seq(
-                xn, lp["mixer"], cfg.ssm, cfg.d_model, cfg.norm_eps)
+                xn, mp, cfg.ssm, cfg.d_model, cfg.norm_eps)
             x = x + y
             cache_entry = {"h": h_final, "conv": conv_state}
 
     if kind.ff != "none":
         xn2 = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
         if kind.ff == "mlp":
-            x = x + mlp(xn2, lp["ff"], cfg.act)
+            x = x + mlp(xn2, lp["ff"], cfg.act, lora=_sub(lora, "ff"),
+                        scale=ctx.lora_scale,
+                        backend=ctx.opts.get("lora_backend", "jnp"))
         elif ctx.opts.get("moe_a2a"):
-            y, aux = moe_ffn_a2a(xn2, lp["ff"], cfg.moe, ctx.meshctx, cfg.act)
+            fp = merge_factors(lp["ff"], _sub(lora, "ff"), ctx.lora_scale)
+            y, aux = moe_ffn_a2a(xn2, fp, cfg.moe, ctx.meshctx, cfg.act)
             x = x + y
         else:
-            y, aux = moe_ffn(xn2, lp["ff"], cfg.moe, ctx.meshctx, cfg.act)
+            fp = merge_factors(lp["ff"], _sub(lora, "ff"), ctx.lora_scale)
+            y, aux = moe_ffn(xn2, fp, cfg.moe, ctx.meshctx, cfg.act)
             x = x + y
     if "adapter" in lp:  # PFTT universal adapter (bottleneck + residual)
         from repro.models.peft import adapter_fwd
@@ -205,31 +244,40 @@ def _cache_write(cache, new, slot):
                                                slot, axis=1)
 
 
-def apply_layer_decode(x, lp, kind: LayerKind, cache, ctx: LayerCtx):
-    """x: (B,1,d).  Returns (x, new_cache)."""
+def apply_layer_decode(x, lp, kind: LayerKind, cache, ctx: LayerCtx,
+                       lora=None):
+    """x: (B,1,d).  Returns (x, new_cache).  ``lora`` as in
+    ``apply_layer_seq`` (factored serving: base stays unmerged)."""
     cfg = ctx.cfg
     pos = ctx.pos
     xn = apply_norm(x, lp["norm1"], cfg.norm, cfg.norm_eps)
     new_cache = cache
 
+    def _ff(x, lq=lora):
+        xn2 = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
+        if kind.ff == "mlp":
+            return x + mlp(xn2, lp["ff"], cfg.act, lora=_sub(lq, "ff"),
+                           scale=ctx.lora_scale,
+                           backend=ctx.opts.get("lora_backend", "jnp"))
+        fp = merge_factors(lp["ff"], _sub(lq, "ff"), ctx.lora_scale)
+        y, _ = moe_ffn(xn2, fp, cfg.moe, ctx.meshctx, cfg.act)
+        return x + y
+
     if kind.mixer in ("attn", "local", "dec"):
+        mf = _sub(lora, "mixer")
         positions = jnp.full((x.shape[0], 1), pos)
-        q, k, v = _qkv(xn, lp["mixer"], cfg, positions, use_rope=True)
+        q, k, v = _qkv(xn, lp["mixer"], cfg, positions, use_rope=True,
+                       lf=mf, ctx=ctx)
         if "k_pers" in cache:  # sparse KV cache (§Perf C)
             new_cache = attn.sparse_kv_write(cache, k, v, pos,
                                              cfg.sparse_attn,
                                              ctx.opts["sparse_kv_seq"])
             y = attn.sparse_kv_decode(q, new_cache, pos, cfg.sparse_attn,
                                       ctx.opts["sparse_kv_seq"])
-            x = x + y.reshape(x.shape[0], 1, -1) @ lp["mixer"]["wo"]
+            x = x + _proj(y.reshape(x.shape[0], 1, -1), lp["mixer"]["wo"],
+                          _sub(mf, "wo"), ctx)
             if kind.ff != "none":
-                xn2b = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
-                if kind.ff == "mlp":
-                    x = x + mlp(xn2b, lp["ff"], cfg.act)
-                else:
-                    yb, _ = moe_ffn(xn2b, lp["ff"], cfg.moe, ctx.meshctx,
-                                    cfg.act)
-                    x = x + yb
+                x = _ff(x)
             if "adapter" in lp:
                 from repro.models.peft import adapter_fwd
                 x = adapter_fwd(x, lp["adapter"])
@@ -247,41 +295,41 @@ def apply_layer_decode(x, lp, kind: LayerKind, cache, ctx: LayerCtx):
                 q, kc, vc, pos + 1,
                 window=cfg.window if kind.mixer == "local" else 0,
                 sparse=sparse, ring=ring)
-        x = x + y.reshape(x.shape[0], 1, -1) @ lp["mixer"]["wo"]
+        x = x + _proj(y.reshape(x.shape[0], 1, -1), lp["mixer"]["wo"],
+                      _sub(mf, "wo"), ctx)
         new_cache = dict(cache, k=kc, v=vc)
         if kind.mixer == "dec":
+            cf = _sub(lora, "cross")
             xn2 = apply_norm(x, lp["norm_x"], cfg.norm, cfg.norm_eps)
-            qx = (xn2 @ lp["cross"]["wq"]).reshape(
+            qx = _proj(xn2, lp["cross"]["wq"], _sub(cf, "wq"), ctx).reshape(
                 x.shape[0], 1, cfg.n_heads, cfg.hd)
             yx = attn.decode_attention(qx, cache["xk"], cache["xv"],
                                        cache["xk"].shape[1])
-            x = x + yx.reshape(x.shape[0], 1, -1) @ lp["cross"]["wo"]
+            x = x + _proj(yx.reshape(x.shape[0], 1, -1), lp["cross"]["wo"],
+                          _sub(cf, "wo"), ctx)
     elif kind.mixer == "mla":
+        mp = merge_factors(lp["mixer"], _sub(lora, "mixer"), ctx.lora_scale)
         c_kv, k_pe = mla_mod._compress_kv(
-            xn, lp["mixer"], cfg.mla, jnp.full((x.shape[0], 1), pos),
+            xn, mp, cfg.mla, jnp.full((x.shape[0], 1), pos),
             cfg.rope_theta, cfg.norm_eps)
         ckv = _cache_write(cache["ckv"], c_kv, pos)
         kpe = _cache_write(cache["kpe"], k_pe, pos)
         sparse = cfg.sparse_attn if ctx.impl == "sparse" else None
-        y = mla_mod.mla_decode(xn, lp["mixer"], cfg.mla, cfg.n_heads, pos,
+        y = mla_mod.mla_decode(xn, mp, cfg.mla, cfg.n_heads, pos,
                                cfg.rope_theta, cfg.norm_eps, ckv, kpe,
                                sparse_cfg=sparse)
         x = x + y
         new_cache = dict(cache, ckv=ckv, kpe=kpe)
     elif kind.mixer == "mamba":
+        mp = merge_factors(lp["mixer"], _sub(lora, "mixer"), ctx.lora_scale)
         y, (h, conv) = ssm_mod.mamba_decode(
-            xn, lp["mixer"], cfg.ssm, cfg.d_model, cfg.norm_eps,
+            xn, mp, cfg.ssm, cfg.d_model, cfg.norm_eps,
             cache["h"], cache["conv"])
         x = x + y
         new_cache = dict(cache, h=h, conv=conv)
 
     if kind.ff != "none":
-        xn2 = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
-        if kind.ff == "mlp":
-            x = x + mlp(xn2, lp["ff"], cfg.act)
-        else:
-            y, _ = moe_ffn(xn2, lp["ff"], cfg.moe, ctx.meshctx, cfg.act)
-            x = x + y
+        x = _ff(x)
     if "adapter" in lp:
         from repro.models.peft import adapter_fwd
         x = adapter_fwd(x, lp["adapter"])

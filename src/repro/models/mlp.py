@@ -9,13 +9,27 @@ def act_fn(name: str):
     return jax.nn.gelu
 
 
-def mlp(x, params, act: str):
-    """swiglu/geglu: act(x·Wg) * (x·Wu) · Wd ;  gelu: act(x·Wu) · Wd."""
+def mlp(x, params, act: str, lora=None, scale: float = 1.0,
+        backend: str = "jnp"):
+    """swiglu/geglu: act(x·Wg) * (x·Wu) · Wd ;  gelu: act(x·Wu) · Wd.
+
+    ``lora`` is an optional factor subtree mirroring ``params`` (see
+    ``peft.lora_proj``): each projection runs factored, never forming the
+    dense delta."""
+    if lora is None:
+        if act in ("swiglu", "geglu"):
+            h = act_fn(act)(x @ params["wg"]) * (x @ params["wu"])
+        else:
+            h = act_fn(act)(x @ params["wu"])
+        return h @ params["wd"]
+    from repro.models.peft import lora_proj
+    proj = lambda t, name: lora_proj(t, params[name], lora.get(name),
+                                     scale=scale, backend=backend)
     if act in ("swiglu", "geglu"):
-        h = act_fn(act)(x @ params["wg"]) * (x @ params["wu"])
+        h = act_fn(act)(proj(x, "wg")) * proj(x, "wu")
     else:
-        h = act_fn(act)(x @ params["wu"])
-    return h @ params["wd"]
+        h = act_fn(act)(proj(x, "wu"))
+    return proj(h, "wd")
 
 
 def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):

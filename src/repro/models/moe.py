@@ -24,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MoEConfig
 from repro.models.mlp import act_fn
-from repro.sharding import MeshCtx
+from repro.sharding import MeshCtx, shard_map
 
 
 def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
@@ -122,7 +122,7 @@ def moe_ffn(x, params, cfg: MoEConfig, meshctx: MeshCtx, act: str):
         model_axis=meshctx.model_axis, shard_experts=shard_experts,
         batch_axes=aux_axes, psum_axes=psum_axes)
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=meshctx.mesh,
         in_specs=(bspec, P(None, None), gu_spec, gu_spec, d_spec),
         out_specs=(bspec, P()),
@@ -263,7 +263,7 @@ def moe_ffn_a2a(x, params, cfg: MoEConfig, meshctx: MeshCtx, act: str):
     body = functools.partial(
         _local_moe_a2a, cfg=cfg, act=act, e_loc=e_loc,
         model_axis=meshctx.model_axis, n_model=msize, axes=aux_axes)
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=meshctx.mesh,
         in_specs=(bspec, P(None, None), expert_spec, expert_spec, expert_spec),
         out_specs=(bspec, P()),

@@ -8,10 +8,24 @@ Representation choices:
 * LoRA factors mirror targeted 2-D (or stacked 3-D) weight leaves:
   ``W (…, din, dout) → A (…, din, r), B (…, r, dout)``, with a per-repeat
   enable mask so clients can LoRA only their last-n layers ("10-12 local
-  LoRAs based on local resources").  The effective weight ``W + (α/r)·A·B``
-  is materialized *inside* the loss function, so autodiff yields exact LoRA
-  gradients while the base stays frozen.  (On TPU the fused
-  ``repro.kernels.lora_fused`` kernel computes the unmerged form.)
+  LoRAs based on local resources").
+* **Factored execution contract** (the default hot path): the lora tree is
+  threaded through the model forward as a *side channel* next to ``params``
+  and every targeted projection computes
+
+      y = x @ W + (α/r) · ((x @ A) @ (mask · B))        # ``lora_proj``
+
+  so the dense ``(din, dout)`` delta is never formed, the frozen base ``W``
+  stays UNBATCHED under the cohort engine's client-vmap (only the rank-r
+  factors carry the client axis), and autodiff produces factor gradients
+  directly.  ``Model.{lm_loss,cls_loss,forward,prefill,decode_step}`` all
+  accept ``lora=``/``lora_scale=``; ``lora_proj(backend="pallas")`` lowers
+  the projection to the fused ``repro.kernels.lora_fused`` kernel (the
+  serving path).  Layer masks ride along the layer scan as ``(repeats,1,1)``
+  leaves.
+* ``apply_lora`` (materialize ``W + (α/r)·mask·A·B`` and run the plain
+  forward) is kept as the merged parity ORACLE — exercised by tests and by
+  the ``factored=False`` flags in ``core/pftt.py``/``core/pfit.py``.
 * Adapters are genuine new modules (bottleneck ``up(gelu(down(x)))`` with a
   residual) injected per layer; ``blocks.apply_layer_*`` applies them when
   the key is present.
@@ -66,8 +80,11 @@ def init_lora(key, params, peft: PEFTConfig) -> Dict:
         r = peft.lora_rank
         a = (jax.random.normal(k, (*lead, din, r)) * din ** -0.5).astype(w.dtype)
         b = jnp.zeros((*lead, r, dout), w.dtype)
-        if lead and peft.lora_layers:
-            mask = (jnp.arange(lead[0]) >= lead[0] - peft.lora_layers)
+        if lead:
+            # always (repeats, 1, 1) so the factors AND their enable mask can
+            # ride the layer scan together (scalar masks are not scannable)
+            mask = (jnp.arange(lead[0]) >= lead[0] - peft.lora_layers
+                    if peft.lora_layers else jnp.ones((lead[0],), bool))
             mask = mask.astype(w.dtype).reshape(lead[0], *([1] * 2))
         else:
             mask = jnp.ones((), w.dtype)
@@ -76,11 +93,12 @@ def init_lora(key, params, peft: PEFTConfig) -> Dict:
     return trees.map_with_path(make, params)
 
 
-def apply_lora(params, lora, peft: PEFTConfig):
-    """Materialize W + (α/r)·mask·(A·B) for targeted leaves."""
+def merge_factors(params, lora, scale: float):
+    """Dense-merge ``W + scale·mask·(A·B)`` over any (sub)tree pair.  The
+    merged parity oracle — and the per-layer fallback for mixers whose
+    internals don't accept factors (mla / mamba)."""
     if lora is None:
         return params
-    scale = peft.lora_alpha / peft.lora_rank
 
     def combine(w, l):
         if l is None:
@@ -89,13 +107,75 @@ def apply_lora(params, lora, peft: PEFTConfig):
         return w + scale * jax.lax.stop_gradient(l["mask"]) * delta
 
     return jax.tree_util.tree_map(combine, params, lora,
-                                  is_leaf=lambda x: x is None or
-                                  (isinstance(x, dict) and "a" in x))
+                                  is_leaf=is_lora_leaf)
+
+
+def apply_lora(params, lora, peft: PEFTConfig):
+    """Materialize W + (α/r)·mask·(A·B) for targeted leaves (merged oracle;
+    the hot path threads factors via ``lora_proj`` instead)."""
+    if lora is None:
+        return params
+    return merge_factors(params, lora, peft.lora_alpha / peft.lora_rank)
 
 
 def merge_lora(params, lora, peft: PEFTConfig):
-    """Permanent merge (serving path)."""
+    """Permanent merge (legacy serving path; factored serving threads the
+    lora tree instead — see ``lora_proj``)."""
     return apply_lora(params, lora, peft)
+
+
+# ---------------------------------------------------------------------------
+# Factored (unmerged) execution — the hot-path contract
+# ---------------------------------------------------------------------------
+
+
+def lora_scale(peft: PEFTConfig) -> float:
+    """The α/r multiplier of the low-rank path."""
+    return peft.lora_alpha / peft.lora_rank
+
+
+def is_lora_leaf(x) -> bool:
+    """is_leaf predicate for {'a','b','mask'} factor dicts (or None)."""
+    return x is None or (isinstance(x, dict) and "a" in x)
+
+
+def lora_proj(x, w, lf, *, scale: float, backend: str = "jnp"):
+    """Factored LoRA projection ``y = x@W + scale·((x@A)@(mask·B))``.
+
+    ``lf`` is the {'a','b','mask'} factor dict mirroring ``w`` (or None →
+    plain ``x@w``).  The dense (din, dout) delta is never materialized, so
+    under a client-vmap only the rank-r factors carry the client axis while
+    ``w`` stays broadcast.  ``backend="pallas"`` lowers the whole projection
+    to the fused ``repro.kernels.lora_fused`` kernel (serving path; 2-D
+    unstacked weights only).
+    """
+    if lf is None or lf.get("a") is None:
+        return x @ w
+    a, b = lf["a"], lf["b"]
+    mask = jax.lax.stop_gradient(lf["mask"])
+    # fold the per-layer enable mask into B: mask is () or (1, 1) once the
+    # layer scan has sliced the (repeats, 1, 1) leaf, broadcasting over
+    # (r, dout) — identical math to masking the dense delta
+    b = b * mask.astype(b.dtype)
+    if backend == "pallas" and w.ndim == 2 and x.ndim >= 2:
+        from repro.kernels.lora_fused.ops import lora_matmul
+        return lora_matmul(x, w, a, b, scale=scale)
+    return x @ w + scale * ((x @ a) @ b)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraProj:
+    """A projection bundling a frozen base weight with optional rank-r
+    factors; calling it runs ``lora_proj``.  ``blocks._proj`` builds one
+    per targeted weight so the factored path reads like the dense path."""
+    w: object
+    lf: Optional[dict] = None
+    scale: float = 1.0
+    backend: str = "jnp"
+
+    def __call__(self, x):
+        return lora_proj(x, self.w, self.lf, scale=self.scale,
+                         backend=self.backend)
 
 
 # ---------------------------------------------------------------------------

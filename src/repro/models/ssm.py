@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import SSMConfig
 from repro.models.norms import rmsnorm
+from repro.sharding import shard_map
 
 
 def segsum(a):
@@ -296,7 +297,7 @@ def mamba_seq_sp(x, p, cfg: SSMConfig, d_model: int, eps: float, meshctx):
     body = functools.partial(_sp_body, cfg=cfg, d_model=d_model, eps=eps,
                              model_axis=meshctx.model_axis, n_dev=msize)
     rep = P(None, None)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=meshctx.mesh,
         in_specs=(bspec, rep, rep, P(None), P(None), P(None), P(None),
                   P(None), rep),

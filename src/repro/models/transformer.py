@@ -101,13 +101,18 @@ class Model:
         return jax.lax.with_sharding_constraint(x, mc.sharding(spec))
 
     def _run_stage_seq(self, x, sp, stage: Stage, ctx: LayerCtx,
-                       collect_cache: bool):
-        def body(carry, layer_params):
+                       collect_cache: bool, lsp=None):
+        """``lsp`` is the stage's LoRA factor subtree (mirrors ``sp``): its
+        rank-r leaves are stacked on the same leading repeat axis as the
+        params and ride the layer scan as a second xs tree."""
+        def body(carry, xs):
+            layer_params, layer_lora = xs
             h = carry
             caches = []
             aux = jnp.zeros((), jnp.float32)
             for pi, kind in enumerate(stage.pattern):
-                h, c, a = apply_layer_seq(h, layer_params[pi], kind, ctx)
+                h, c, a = apply_layer_seq(h, layer_params[pi], kind, ctx,
+                                          lora=layer_lora[pi])
                 caches.append(c)
                 aux = aux + a
             h = self._constrain(h, seq_shard=True)
@@ -115,7 +120,10 @@ class Model:
 
         if self.remat and ctx.mode == "train":
             body = jax.checkpoint(body)
-        x, (caches, auxs) = jax.lax.scan(body, x, tuple(sp["layers"]))
+        lora_layers = (tuple(lsp["layers"]) if lsp is not None
+                       else tuple(None for _ in sp["layers"]))
+        x, (caches, auxs) = jax.lax.scan(body, x,
+                                         (tuple(sp["layers"]), lora_layers))
         return x, caches, auxs.sum()
 
     def _embed_tokens(self, params, tokens, positions):
@@ -128,7 +136,28 @@ class Model:
             x = x + pos_table[positions].astype(self.dtype)
         return x
 
-    def _encode(self, params, frames, ctx_kwargs):
+    @staticmethod
+    def _lora_stage(lora, si):
+        """The per-stage slice of a LoRA side-channel tree (None-safe)."""
+        return None if lora is None else lora["stages"][si]
+
+    @staticmethod
+    def _check_lora(lora):
+        """The factored side channel only reaches layer-stack projections;
+        factors mirroring any other leaf (cls_head, lm_head, embed, …)
+        would be SILENTLY ignored — fail loudly at trace time instead
+        (the merged oracle ``peft.apply_lora`` does support them)."""
+        if lora is None:
+            return
+        from repro import trees
+        stray = [p for p in trees.flatten(lora) if not p.startswith("stages/")]
+        if stray:
+            raise ValueError(
+                "factored LoRA execution only supports factors on stage "
+                f"layer weights; found factors at {sorted(set(stray))} — "
+                "merge these with peft.apply_lora instead")
+
+    def _encode(self, params, frames, ctx_kwargs, lora=None):
         """Whisper encoder: frames are post-conv embeddings (B, S_enc, d)."""
         cfg = self.cfg
         x = frames.astype(self.dtype) + params["enc_pos"][None].astype(self.dtype)
@@ -139,29 +168,40 @@ class Model:
             if stage.stream != "encoder":
                 continue
             x, _, _ = self._run_stage_seq(x, params["stages"][si], stage, ctx,
-                                          collect_cache=False)
+                                          collect_cache=False,
+                                          lsp=self._lora_stage(lora, si))
         return apply_norm(x, params["enc_norm"], cfg.norm, cfg.norm_eps)
 
     # -------------------------------------------------------------- forward
     def forward(self, params, tokens, *, frames=None, patches=None,
                 impl: Optional[str] = None, mode: str = "train",
-                collect_cache: bool = False):
-        """Returns (hidden, aux[, caches]).  tokens: (B, S_text)."""
+                collect_cache: bool = False, lora=None,
+                lora_scale: float = 1.0):
+        """Returns (hidden, aux[, caches]).  tokens: (B, S_text).
+
+        ``lora`` is an optional factored-LoRA side channel (``peft.init_lora``
+        structure, mirroring ``params``): targeted projections run
+        ``y = x@W + lora_scale·(x@A)@B`` without merging, so the base stays
+        unbatched under an outer client-vmap."""
         cfg = self.cfg
         impl = impl or self.impl
+        self._check_lora(lora)
         memory = None
         if cfg.is_encoder_decoder:
             memory = self._encode(params, frames,
-                                  dict(impl=impl, mode=mode))
+                                  dict(impl=impl, mode=mode,
+                                       lora_scale=lora_scale), lora=lora)
         if cfg.is_encoder_only:
             positions = jnp.arange(tokens.shape[1])
             x = self._embed_tokens(params, tokens, positions)
             ctx = LayerCtx(cfg=cfg, meshctx=self.meshctx, positions=positions,
-                           impl=impl, mode=mode, causal=False, opts=self.opts)
+                           impl=impl, mode=mode, causal=False, opts=self.opts,
+                           lora_scale=lora_scale)
             aux_total = jnp.zeros((), jnp.float32)
             for si, stage in enumerate(cfg.stages):
                 x, _, aux = self._run_stage_seq(x, params["stages"][si], stage,
-                                                ctx, collect_cache=False)
+                                                ctx, collect_cache=False,
+                                                lsp=self._lora_stage(lora, si))
                 aux_total += aux
             x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
             return (x, aux_total, None) if collect_cache else (x, aux_total)
@@ -177,7 +217,8 @@ class Model:
             x = self._embed_tokens(params, tokens, positions)
 
         ctx = LayerCtx(cfg=cfg, meshctx=self.meshctx, positions=positions,
-                       impl=impl, memory=memory, mode=mode, opts=self.opts)
+                       impl=impl, memory=memory, mode=mode, opts=self.opts,
+                       lora_scale=lora_scale)
         x = self._constrain(x, seq_shard=True)
         aux_total = jnp.zeros((), jnp.float32)
         caches = []
@@ -186,7 +227,8 @@ class Model:
                 caches.append(None)
                 continue
             x, c, aux = self._run_stage_seq(x, params["stages"][si], stage,
-                                            ctx, collect_cache=collect_cache)
+                                            ctx, collect_cache=collect_cache,
+                                            lsp=self._lora_stage(lora, si))
             caches.append(c)
             aux_total += aux
         x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
@@ -201,12 +243,13 @@ class Model:
         return params["lm_head"]
 
     def lm_loss(self, params, batch, *, impl: Optional[str] = None,
-                chunk: int = 512):
+                chunk: int = 512, lora=None, lora_scale: float = 1.0):
         """Chunked cross-entropy: never materializes (B, S, vocab)."""
         cfg = self.cfg
         hidden, aux = self.forward(
             params, batch["tokens"], frames=batch.get("frames"),
-            patches=batch.get("patches"), impl=impl, mode="train")
+            patches=batch.get("patches"), impl=impl, mode="train",
+            lora=lora, lora_scale=lora_scale)
         labels, mask = batch["labels"], batch["mask"]
         if cfg.n_prefix_tokens:  # loss only on text positions
             hidden = hidden[:, cfg.n_prefix_tokens:]
@@ -233,9 +276,11 @@ class Model:
             (hc, lc, mc))
         return tot / jnp.maximum(cnt, 1.0) + AUX_WEIGHT * aux
 
-    def cls_loss(self, params, batch, *, impl: Optional[str] = None):
+    def cls_loss(self, params, batch, *, impl: Optional[str] = None,
+                 lora=None, lora_scale: float = 1.0):
         """Encoder classifier loss (PFTT / roberta).  batch: tokens, label."""
-        hidden, aux = self.forward(params, batch["tokens"], impl=impl)
+        hidden, aux = self.forward(params, batch["tokens"], impl=impl,
+                                   lora=lora, lora_scale=lora_scale)
         logits = (hidden[:, 0] @ params["cls_head"]).astype(jnp.float32)
         logz = jax.nn.logsumexp(logits, axis=-1)
         ll = jnp.take_along_axis(logits, batch["label"][:, None], axis=-1)[:, 0]
@@ -272,12 +317,14 @@ class Model:
 
     # -------------------------------------------------------------- prefill
     def prefill(self, params, tokens, cache_len: int, *, frames=None,
-                patches=None, impl: Optional[str] = None):
+                patches=None, impl: Optional[str] = None, lora=None,
+                lora_scale: float = 1.0):
         """Run the prompt, return (last_token_logits, cache)."""
         cfg = self.cfg
         hidden, _, caches = self.forward(
             params, tokens, frames=frames, patches=patches, impl=impl,
-            mode="prefill", collect_cache=True)
+            mode="prefill", collect_cache=True, lora=lora,
+            lora_scale=lora_scale)
         s_prompt = hidden.shape[1]
         stages = []
         for si, stage in enumerate(cfg.stages):
@@ -311,15 +358,18 @@ class Model:
         return self.logits(params, last), cache
 
     # ---------------------------------------------------------------- decode
-    def decode_step(self, params, cache, tokens, *, impl: Optional[str] = None):
+    def decode_step(self, params, cache, tokens, *, impl: Optional[str] = None,
+                    lora=None, lora_scale: float = 1.0):
         """tokens: (B, 1) → (logits (B, vocab), updated cache)."""
         cfg = self.cfg
         impl = impl or self.impl
+        self._check_lora(lora)
         pos = cache["pos"]
         x = self._embed_tokens(params, tokens,
                                jnp.full(tokens.shape, pos, jnp.int32))
         ctx = LayerCtx(cfg=cfg, meshctx=self.meshctx, positions=None,
-                       impl=impl, mode="decode", pos=pos, opts=self.opts)
+                       impl=impl, mode="decode", pos=pos, opts=self.opts,
+                       lora_scale=lora_scale)
         new_stages = []
         for si, stage in enumerate(cfg.stages):
             if stage.stream != "decoder":
@@ -328,17 +378,21 @@ class Model:
 
             def body(carry, xs, stage=stage):
                 h = carry
-                layer_params, cache_slices = xs
+                layer_params, cache_slices, layer_lora = xs
                 new_slices = []
                 for pi, kind in enumerate(stage.pattern):
                     h, nc = apply_layer_decode(h, layer_params[pi], kind,
-                                               cache_slices[pi], ctx)
+                                               cache_slices[pi], ctx,
+                                               lora=layer_lora[pi])
                     new_slices.append(nc)
                 return h, new_slices
 
+            lsp = self._lora_stage(lora, si)
+            lora_layers = (tuple(lsp["layers"]) if lsp is not None
+                           else tuple(None for _ in stage.pattern))
             x, new_cache = jax.lax.scan(
                 body, x, (tuple(params["stages"][si]["layers"]),
-                          tuple(cache["stages"][si])))
+                          tuple(cache["stages"][si]), lora_layers))
             new_stages.append(list(new_cache))
         x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
         logits = self.logits(params, x[:, 0])

@@ -7,19 +7,23 @@ import jax.numpy as jnp
 
 
 def generate(model, params, prompts, gen_len: int, key, *,
-             temperature: float = 1.0):
+             temperature: float = 1.0, lora=None, lora_scale: float = 1.0):
     """prompts: (B, P) int32 → tokens (B, P+gen_len).
 
     Fixed-length generation (EOS handled by the reward masks downstream);
-    scan over decode steps with a KV cache."""
+    scan over decode steps with a KV cache.  ``lora`` serves a personalized
+    client unmerged: prefill and every decode step run the factored
+    projections (``peft.lora_proj``), the base stays shared."""
     b, p = prompts.shape
-    logits, cache = model.prefill(params, prompts, cache_len=p + gen_len)
+    logits, cache = model.prefill(params, prompts, cache_len=p + gen_len,
+                                  lora=lora, lora_scale=lora_scale)
 
     def step(carry, k):
         logits, cache = carry
         tok = jax.random.categorical(k, logits / temperature, axis=-1)
         tok = tok[:, None].astype(jnp.int32)
-        new_logits, cache = model.decode_step(params, cache, tok)
+        new_logits, cache = model.decode_step(params, cache, tok, lora=lora,
+                                              lora_scale=lora_scale)
         return (new_logits, cache), tok[:, 0]
 
     keys = jax.random.split(key, gen_len)

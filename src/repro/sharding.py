@@ -18,6 +18,29 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    """``jax.shard_map`` compat shim: on jax ≥ 0.6 forwards directly; on
+    0.4.x (this container) routes to ``jax.experimental.shard_map`` with
+    ``check_vma`` mapped to its older ``check_rep`` spelling.  Model code
+    must use THIS instead of ``jax.shard_map``."""
+    if hasattr(jax, "shard_map"):
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def use_mesh(mesh: Mesh):
+    """``jax.set_mesh`` compat: a context manager activating ``mesh`` (on
+    0.4.x the Mesh object itself is the context manager)."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshCtx:
     mesh: Mesh

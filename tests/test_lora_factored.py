@@ -1,0 +1,227 @@
+"""Factored (unmerged) LoRA execution vs the merged oracle.
+
+The factored path (``peft.lora_proj`` threaded through the model as a side
+channel) must reproduce ``apply_lora``-merged execution exactly — forward
+activations, factor gradients, prefill/decode logits — including partial
+``lora_layers`` masks and GQA (n_kv_heads < n_heads) targets, and the
+Pallas serving lowering must agree with the jnp path.  End-to-end, the
+factored PFTT run must match the merged-oracle run round-for-round, and
+per-round cohort eval must be ONE fused dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import trees
+from repro.configs import get_config
+from repro.models import Model
+from repro.models import peft as peft_mod
+from repro.sharding import MeshCtx
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _randomize_factors(lora, seed=1):
+    """init_lora zeros B (delta starts at 0); give every factor leaf real
+    values so parity actually exercises the low-rank path."""
+    def rnd(x):
+        if hasattr(x, "ndim") and x.ndim >= 2 and x.shape[-2:] != (1, 1):
+            return jax.random.normal(jax.random.fold_in(KEY, seed),
+                                     x.shape) * 0.05
+        return x
+    return jax.tree_util.tree_map(rnd, lora)
+
+
+def _mk(arch, d_model=32, repeats=3, targets=("mixer/wq", "mixer/wv"),
+        lora_layers=0, rank=4):
+    mcfg = get_config(arch).reduced(d_model=d_model, repeats=repeats)
+    model = Model(mcfg, meshctx=MeshCtx.single_device())
+    params = model.init(KEY, max_seq=64)
+    pc = peft_mod.PEFTConfig(lora_rank=rank, lora_alpha=2.0 * rank,
+                             lora_targets=targets, lora_layers=lora_layers)
+    lora = _randomize_factors(peft_mod.init_lora(KEY, params, pc))
+    return mcfg, model, params, pc, lora
+
+
+# ---------------------------------------------------------------------------
+# forward / gradient parity (encoder-only = the PFTT backbone)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lora_layers", [0, 2])
+def test_forward_parity_encoder(lora_layers):
+    mcfg, model, params, pc, lora = _mk(
+        "roberta-base", lora_layers=lora_layers,
+        targets=("mixer/wq", "mixer/wv", "mixer/wo", "ff/wu", "ff/wd"))
+    toks = jax.random.randint(jax.random.fold_in(KEY, 2), (2, 16), 0,
+                              mcfg.vocab_size)
+    merged = peft_mod.apply_lora(params, lora, pc)
+    h_m, _ = model.forward(merged, toks)
+    h_f, _ = model.forward(params, toks, lora=lora,
+                           lora_scale=peft_mod.lora_scale(pc))
+    np.testing.assert_allclose(np.asarray(h_f), np.asarray(h_m), atol=1e-5)
+
+
+def test_grad_parity_encoder():
+    mcfg, model, params, pc, lora = _mk(
+        "roberta-base", lora_layers=2,
+        targets=("mixer/wq", "mixer/wv", "mixer/wo"))
+    batch = {"tokens": jax.random.randint(jax.random.fold_in(KEY, 2),
+                                          (2, 16), 0, mcfg.vocab_size),
+             "label": jnp.asarray([1, 2])}
+    scale = peft_mod.lora_scale(pc)
+    gm = jax.grad(lambda lo: model.cls_loss(
+        peft_mod.apply_lora(params, lo, pc), batch)[0])(lora)
+    gf = jax.grad(lambda lo: model.cls_loss(
+        params, batch, lora=lo, lora_scale=scale)[0])(lora)
+    flat_f = trees.flatten(gf)
+    for path, gmv in trees.flatten(gm).items():
+        np.testing.assert_allclose(np.asarray(flat_f[path]), np.asarray(gmv),
+                                   atol=1e-6, err_msg=path)
+
+
+def test_forward_parity_gqa_decoder():
+    """GQA: wk/wv project to n_kv_heads·hd < n_heads·hd — factored factors
+    mirror the rectangular leaves."""
+    import dataclasses
+    mcfg = dataclasses.replace(
+        get_config("llama3.2-1b").reduced(d_model=32, repeats=2),
+        n_kv_heads=2)                       # force real grouped-query
+    assert mcfg.n_kv_heads < mcfg.n_heads
+    model = Model(mcfg, meshctx=MeshCtx.single_device())
+    params = model.init(KEY, max_seq=64)
+    pc = peft_mod.PEFTConfig(
+        lora_rank=4, lora_alpha=8.0,
+        lora_targets=("mixer/wq", "mixer/wk", "mixer/wv", "mixer/wo"))
+    lora = _randomize_factors(peft_mod.init_lora(KEY, params, pc))
+    toks = jax.random.randint(jax.random.fold_in(KEY, 3), (2, 12), 0,
+                              mcfg.vocab_size)
+    merged = peft_mod.apply_lora(params, lora, pc)
+    h_m, _ = model.forward(merged, toks)
+    h_f, _ = model.forward(params, toks, lora=lora,
+                           lora_scale=peft_mod.lora_scale(pc))
+    np.testing.assert_allclose(np.asarray(h_f), np.asarray(h_m), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving parity: prefill + decode, jnp and Pallas lowering
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_decode_parity_and_pallas():
+    mcfg, model, params, pc, lora = _mk("gpt2-small", repeats=2)
+    scale = peft_mod.lora_scale(pc)
+    prompts = jnp.asarray(np.random.RandomState(0).randint(6, 50, (2, 8)))
+    merged = peft_mod.apply_lora(params, lora, pc)
+    lg_m, c_m = model.prefill(merged, prompts, cache_len=12)
+    lg_f, c_f = model.prefill(params, prompts, cache_len=12, lora=lora,
+                              lora_scale=scale)
+    np.testing.assert_allclose(np.asarray(lg_f), np.asarray(lg_m), atol=1e-4)
+    tok = jnp.argmax(lg_m, -1)[:, None].astype(jnp.int32)
+    d_m, _ = model.decode_step(merged, c_m, tok)
+    d_f, _ = model.decode_step(params, c_f, tok, lora=lora, lora_scale=scale)
+    np.testing.assert_allclose(np.asarray(d_f), np.asarray(d_m), atol=1e-4)
+
+    # the fused Pallas kernel is the serving lowering of the same contract
+    model_p = Model(mcfg, meshctx=MeshCtx.single_device(),
+                    opts={"lora_backend": "pallas"})
+    lg_p, c_p = model_p.prefill(params, prompts, cache_len=12, lora=lora,
+                                lora_scale=scale)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_f), atol=1e-5)
+    d_p, _ = model_p.decode_step(params, c_p, tok, lora=lora,
+                                 lora_scale=scale)
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_f), atol=1e-5)
+
+
+def test_non_stage_lora_targets_rejected_on_factored_path():
+    """Factors outside the layer stacks (e.g. cls_head) would be silently
+    ignored by the side channel — the model must refuse them at trace time
+    (the merged oracle apply_lora still supports such targets)."""
+    mcfg, model, params, pc, lora = _mk("roberta-base", repeats=2,
+                                        targets=("cls_head",))
+    toks = jax.random.randint(jax.random.fold_in(KEY, 4), (2, 8), 0,
+                              mcfg.vocab_size)
+    with pytest.raises(ValueError, match="factored LoRA"):
+        model.forward(params, toks, lora=lora, lora_scale=1.0)
+
+
+def test_lora_proj_pallas_nonaligned_shapes():
+    """The kernel must accept the model's real (non-128-multiple) dims."""
+    from repro.models.peft import lora_proj
+    k = jax.random.split(KEY, 4)
+    x = jax.random.normal(k[0], (3, 7, 48))
+    w = jax.random.normal(k[1], (48, 36)) * 0.1
+    lf = {"a": jax.random.normal(k[2], (48, 4)) * 0.1,
+          "b": jax.random.normal(k[3], (4, 36)) * 0.1,
+          "mask": jnp.ones(())}
+    ref = lora_proj(x, w, lf, scale=2.0)
+    out = lora_proj(x, w, lf, scale=2.0, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: factored vs merged oracle + O(1)-dispatch cohort eval
+# ---------------------------------------------------------------------------
+
+
+def test_pftt_factored_matches_merged_oracle():
+    from repro.core.pftt import PFTTConfig, run_pftt
+    kw = dict(n_clients=2, rounds=3, local_steps=2, pretrain_steps=10,
+              samples_per_client=120, d_model=32, seed=0)
+    fac = run_pftt(PFTTConfig(factored=True, **kw))
+    mrg = run_pftt(PFTTConfig(factored=False, **kw))
+    np.testing.assert_allclose(fac["acc_per_round"], mrg["acc_per_round"],
+                               atol=1e-5)
+    assert fac["mean_round_bytes"] == mrg["mean_round_bytes"]
+    # engine-side eval: the whole cohort is scored in ONE fused vmapped
+    # dispatch per round, regardless of cohort size or ragged test sets
+    assert fac["eval_dispatches_per_round"] == 1
+    assert mrg["eval_dispatches_per_round"] == 1
+
+
+def test_cohort_eval_padded_matches_per_client():
+    """build_cohort_eval over a padded/masked stacked test set reproduces
+    per-client eval exactly (correct counts are integers)."""
+    from repro.core.cohort import build_cohort_eval
+    mcfg, model, params, pc, lora = _mk("roberta-base", repeats=2)
+    rng = np.random.RandomState(0)
+    sizes = [5, 3]                       # ragged test sets
+    max_n = max(sizes)
+    toks = np.zeros((2, max_n, 12), np.int32)
+    labels = np.zeros((2, max_n), np.int32)
+    valid = np.zeros((2, max_n), np.float32)
+    per_client = []
+    for ci, n in enumerate(sizes):
+        t = rng.randint(0, mcfg.vocab_size, (n, 12))
+        l = rng.randint(0, mcfg.n_classes, (n,))
+        toks[ci, :n], labels[ci, :n], valid[ci, :n] = t, l, 1.0
+        per_client.append((t, l))
+
+    def eval_client(trainable, tk, lb, vd):
+        h, _ = model.forward(trainable, tk)
+        pred = (h[:, 0] @ trainable["cls_head"]).astype(
+            jnp.float32).argmax(-1)
+        return ((pred == lb).astype(jnp.float32) * vd).sum(), vd.sum()
+
+    ev = build_cohort_eval(eval_client)
+    corr, cnt = ev(trees.stack([params, params]), jnp.asarray(toks),
+                   jnp.asarray(labels), jnp.asarray(valid))
+    for ci, (t, l) in enumerate(per_client):
+        h, _ = model.forward(params, jnp.asarray(t))
+        pred = (h[:, 0] @ params["cls_head"]).astype(jnp.float32).argmax(-1)
+        assert int(corr[ci]) == int((np.asarray(pred) == l).sum())
+        assert int(cnt[ci]) == len(l)
+
+
+def test_host_batch_stacker_reuses_buffer():
+    from repro.core.cohort import HostBatchStacker
+    stacker = HostBatchStacker()
+    mk = lambda v: [[{"x": np.full((2, 3), v + 10 * ci + si, np.float32)}
+                     for si in range(2)] for ci in range(2)]
+    out1 = stacker(mk(0.0))
+    buf_id = id(stacker._bufs["x"])
+    out2 = stacker(mk(1.0))
+    assert id(stacker._bufs["x"]) == buf_id          # no realloc
+    assert out1["x"].shape == (2, 2, 2, 3)
+    np.testing.assert_array_equal(np.asarray(out2["x"])[1, 1],
+                                  np.full((2, 3), 12.0))

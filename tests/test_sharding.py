@@ -36,7 +36,7 @@ SUBPROC = textwrap.dedent("""
     from repro.configs import get_config
     from repro.models import Model
     from repro.sharding import (MeshCtx, batch_specs, param_specs,
-                                with_specs)
+                                use_mesh, with_specs)
     from repro import trees
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -61,7 +61,7 @@ SUBPROC = textwrap.dedent("""
     def loss_fn(p, b):
         return model.lm_loss(p, b)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         l = loss_fn(params, batch)
     assert np.isfinite(float(l)), l
     # sharded value == single-device value
