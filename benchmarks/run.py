@@ -1,64 +1,110 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] \
+        [--only fl_engine,lora_path,cohort_shard]
 
 Default is the quick profile (CI-friendly); ``--full`` (or env FULL=1) runs
-the paper's 40-round simulations.  Prints ``name,us_per_call,derived`` CSV
-blocks plus the per-figure summaries.
+the paper's 40-round simulations.  ``--only`` takes a comma-separated
+subset.  Prints ``name,us_per_call,derived`` CSV blocks plus the per-figure
+summaries.  A benchmark that raises is reported (traceback + summary line)
+and the process exits nonzero after the remaining selections finish — no
+silent failures in CI.
 """
 import argparse
 import os
 import sys
 import time
+import traceback
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    default=bool(os.environ.get("FULL")))
-    ap.add_argument("--only", default=None,
-                    choices=[None, "table1", "fig4", "fig5", "kernels",
-                             "roofline", "fl_engine", "lora_path"])
-    args, _ = ap.parse_known_args()
-    quick = not args.full
+def _benches():
+    """name → thunk, in run order (imports stay lazy)."""
 
-    t0 = time.time()
-    if args.only in (None, "table1"):
+    def table1():
         print("# === Table I: learning-stage parameter/communication fractions ===")
         from benchmarks import table1_stages
         table1_stages.main()
 
-    if args.only in (None, "kernels"):
+    def kernels():
         print("\n# === kernel microbench (interpret mode; CSV: name,us_per_call,derived) ===")
         from benchmarks import kernel_bench
         kernel_bench.main()
 
-    if args.only in (None, "fl_engine"):
+    def fl_engine(quick):
         print("\n# === FL cohort engine: looped vs fused vmapped rounds ===")
         from benchmarks import fl_engine_bench
         fl_engine_bench.main(quick=quick, out="BENCH_fl_engine.json")
 
-    if args.only in (None, "lora_path"):
+    def lora_path(quick):
         print("\n# === LoRA execution path: merged vs factored under client-vmap ===")
         from benchmarks import lora_path_bench
         lora_path_bench.main(quick=quick, out="BENCH_lora_path.json")
 
-    if args.only in (None, "fig5"):
+    def cohort_shard(quick):
+        print("\n# === sharded cohort engine: fused round on 1 vs 8 devices ===")
+        from benchmarks import cohort_shard_bench
+        cohort_shard_bench.main(quick=quick, out="BENCH_cohort_shard.json")
+
+    def fig5(quick):
         print("\n# === Fig. 5: PFTT accuracy / communication ===")
         from benchmarks import fig5_pftt
         fig5_pftt.main(quick=quick, out="experiments/fig5_pftt.json")
 
-    if args.only in (None, "fig4"):
+    def fig4(quick):
         print("\n# === Fig. 4: PFIT reward / communication ===")
         from benchmarks import fig4_pfit
         fig4_pfit.main(quick=quick, out="experiments/fig4_pfit.json")
 
-    if args.only in (None, "roofline"):
+    def roofline():
         print("\n# === Roofline (from dry-run artifacts) ===")
-        from benchmarks import roofline
-        roofline.main()
+        from benchmarks import roofline as roofline_mod
+        roofline_mod.main()
+
+    return {"table1": lambda quick: table1(),
+            "kernels": lambda quick: kernels(),
+            "fl_engine": fl_engine,
+            "lora_path": lora_path,
+            "cohort_shard": cohort_shard,
+            "fig5": fig5,
+            "fig4": fig4,
+            "roofline": lambda quick: roofline()}
+
+
+def main() -> None:
+    benches = _benches()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    default=bool(os.environ.get("FULL")))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(benches))
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    if args.only is None:
+        selected = list(benches)
+    else:
+        selected = [s for s in args.only.split(",") if s]
+        unknown = [s for s in selected if s not in benches]
+        if unknown:
+            print(f"unknown benchmark(s) {unknown}; choose from "
+                  f"{sorted(benches)}", file=sys.stderr)
+            sys.exit(2)
+
+    t0 = time.time()
+    failures = []
+    for name in selected:
+        try:
+            benches[name](quick)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"# BENCHMARK FAILED: {name} (continuing)", file=sys.stderr)
 
     print(f"\n# total {time.time()-t0:.0f}s (quick={quick})")
+    if failures:
+        print(f"# FAILED benchmarks: {','.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -15,8 +15,16 @@ The per-leaf weighted mean is a single ``jnp.tensordot`` over the client
 axis (no per-client Python accumulation), with the dtype-preserving cast of
 the original implementation.
 
-On a TPU deployment these are ``psum``s over the ("pod","data") axes — see
-``launch/steps.py::make_fl_round_step`` for the collective formulation proven by the dry-run.
+Every stacked operator takes ``axis_names=``: under the cohort engine's
+``shard_map`` (client axis sharded over the ("pod","data") mesh axes) the
+weighted mean becomes a per-shard partial sum of weighted client
+contributions followed by a ``psum`` over ``axis_names``, with the weight
+normalization moved AFTER the collective (each shard only sees its local
+slice of the weight vector).  Zero-weight clients — outages and the
+engine's ghost padding — drop out of numerator and denominator alike, so
+the sharded result matches the single-device math up to summation order.
+``launch/steps.py::make_fl_round_step`` is the same formulation stated as
+autodiff structure for the dry-run.
 """
 from __future__ import annotations
 
@@ -58,21 +66,41 @@ def _pad_mask(m, ndim: int):
 # ---------------------------------------------------------------------------
 
 
-def fedavg_stacked(stacked_tree, weights=None):
-    """Weighted mean over the leading client axis of every leaf."""
+def fedavg_stacked(stacked_tree, weights=None, *, axis_names=None):
+    """Weighted mean over the leading client axis of every leaf.
+
+    ``axis_names`` (inside ``shard_map`` only): the client axis is sharded
+    over these mesh axes — the per-shard weighted partial sums and the
+    weight total are ``psum``ed before normalizing, so every shard returns
+    the same replicated global mean."""
     leaves = jax.tree_util.tree_leaves(stacked_tree)
     if not leaves:
         return stacked_tree
-    w = _client_weights(leaves[0].shape[0], weights)
-    return jax.tree_util.tree_map(lambda l: _weighted_mean(l, w), stacked_tree)
+    if axis_names is None:
+        w = _client_weights(leaves[0].shape[0], weights)
+        return jax.tree_util.tree_map(lambda l: _weighted_mean(l, w),
+                                      stacked_tree)
+    n = leaves[0].shape[0]
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    den = jnp.maximum(jax.lax.psum(w.sum(), axis_names), 1e-12)
+
+    def agg(l):
+        num = jax.lax.psum(jnp.tensordot(w, l.astype(jnp.float32), axes=1),
+                           axis_names)
+        return (num / den).astype(l.dtype)
+
+    return jax.tree_util.tree_map(agg, stacked_tree)
 
 
 def partial_fedavg_stacked(global_tree, stacked_tree,
-                           pred: Callable[[str], bool], weights=None):
+                           pred: Callable[[str], bool], weights=None, *,
+                           axis_names=None):
     """Aggregate only leaves whose path satisfies ``pred``; others keep the
     global value.  ``stacked_tree`` may be a selected subtree (None leaves
     elsewhere) or the full stacked tree."""
-    flat_avg = trees.flatten(fedavg_stacked(stacked_tree, weights))
+    flat_avg = trees.flatten(fedavg_stacked(stacked_tree, weights,
+                                            axis_names=axis_names))
 
     def pick(path, g):
         return flat_avg[path] if (pred(path) and path in flat_avg) else g
@@ -81,11 +109,14 @@ def partial_fedavg_stacked(global_tree, stacked_tree,
 
 
 def masked_fedavg_stacked(global_tree, stacked_tree, stacked_masks,
-                          weights=None):
+                          weights=None, *, axis_names=None):
     """Elementwise θ_g ← Σ_i w_i·m_i·θ_i / Σ_i w_i·m_i, keeping θ_g where the
     denominator is zero.  ``stacked_masks`` are 1/0 float trees with the same
     leading client axis (leading-aligned broadcast against each leaf);
-    ``weights`` is the outage/selection vector (None → all clients count)."""
+    ``weights`` is the outage/selection vector (None → all clients count).
+    ``axis_names`` (inside ``shard_map`` only): per-shard numerator and
+    denominator partial sums are ``psum``ed over these mesh axes before the
+    divide, so the den==0 kept-global semantics are evaluated globally."""
     leaves = jax.tree_util.tree_leaves(stacked_tree)
     n = leaves[0].shape[0]
     if weights is None:
@@ -97,6 +128,9 @@ def masked_fedavg_stacked(global_tree, stacked_tree, stacked_masks,
         wm = _pad_mask(w, t.ndim) * _pad_mask(m.astype(jnp.float32), t.ndim)
         num = (wm * t.astype(jnp.float32)).sum(0)
         den = jnp.broadcast_to(wm, t.shape).sum(0)
+        if axis_names is not None:
+            num = jax.lax.psum(num, axis_names)
+            den = jax.lax.psum(den, axis_names)
         # guard only the den==0 lanes (kept-global anyway); clamping with
         # maximum(den, 1) would silently mis-scale fractional weights
         avg = num / jnp.where(den > 0, den, 1.0)

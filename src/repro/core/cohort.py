@@ -28,6 +28,20 @@ per-client weight *vector* (``RayleighChannel.outage_weights``), zero
 entries drop a client from the weighted mean, and an all-zero vector gates
 both the global update and the broadcast (clients keep local state), which
 reproduces the legacy skip-on-all-outage semantics bit-for-bit.
+
+Both round builders take ``mesh=``/``client_axes=``: the round body is then
+wrapped in ``shard_map`` with the stacked client axis sharded over the
+given mesh axes (("pod","data") on the production mesh), so ONE fused round
+spans every device.  Each shard runs the client-vmap × local-step scan on
+its local client slice; the stacked aggregation becomes a ``psum`` of
+per-shard weighted partial sums (``aggregation.*_stacked(axis_names=...)``)
+and the broadcast-back consumes the replicated global.  Anything without a
+client axis — the frozen base, the PPO global model, reward models — stays
+replicated (closed-over or ``P()``-specced), so only rank-r LoRA factors /
+trainables and optimizer moments pay per-device memory.  Cohorts that do
+not divide the shard count are padded with zero-weight **ghost clients**
+(``repro.sharding.cohort_sharding``) that the weight vector masks out of
+the aggregation exactly.
 """
 from __future__ import annotations
 
@@ -36,12 +50,14 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import trees
 from repro.core.aggregation import (broadcast_merge_stacked, fedavg_stacked,
                                     masked_fedavg_stacked)
 from repro.rlhf.ppo import PPOConfig, make_ppo_fns
 from repro.rlhf.rollout import generate
+from repro.sharding import client_shard_axes, shard_map
 
 
 class HostBatchStacker:
@@ -49,10 +65,16 @@ class HostBatchStacker:
     (n_clients, local_steps, …) layout WITHOUT reallocating: the stacked
     numpy buffer is allocated once on the first round and refilled in place,
     then shipped with a single ``jax.device_put`` call per round (one
-    transfer per leaf, no per-(client, step) ``np.stack`` garbage)."""
+    transfer per leaf, no per-(client, step) ``np.stack`` garbage).
 
-    def __init__(self):
+    ``sharding`` (a client-axis ``NamedSharding``, e.g.
+    ``CohortSharding.named``): each device receives ONLY its own client
+    shard of the host buffer — per-shard slices instead of one replicated
+    whole-cohort transfer per device."""
+
+    def __init__(self, sharding: Optional[NamedSharding] = None):
         self._bufs = None
+        self._sharding = sharding
 
     def __call__(self, per_client_batches):
         nc = len(per_client_batches)
@@ -65,7 +87,9 @@ class HostBatchStacker:
             for si, step in enumerate(cb):
                 for k, v in step.items():
                     self._bufs[k][ci, si] = v
-        return jax.device_put(self._bufs)
+        if self._sharding is None:
+            return jax.device_put(self._bufs)
+        return jax.device_put(self._bufs, self._sharding)
 
 
 def stack_host_batches(per_client_batches):
@@ -76,20 +100,39 @@ def stack_host_batches(per_client_batches):
     return HostBatchStacker()(per_client_batches)
 
 
-def build_cohort_eval(eval_fn: Callable):
+def build_cohort_eval(eval_fn: Callable,
+                      sharding: Optional[NamedSharding] = None):
     """Fuse per-client eval into ONE jitted vmapped dispatch per round.
 
     ``eval_fn(trainable, *per_client_data) -> pytree`` is the UNJITTED
     single-client eval; every argument is stacked on a leading client axis
     (ragged test sets are padded to a common shape with a validity mask —
     the mask rides in as one of the stacked args).  Returns the vmapped
-    jitted cohort eval."""
-    return jax.jit(jax.vmap(eval_fn))
+    jitted cohort eval.
+
+    ``sharding`` (client-axis ``NamedSharding``): every stacked input is
+    constrained to the client sharding, so GSPMD keeps the vmapped eval
+    device-parallel over the mesh instead of gathering the cohort."""
+    f = jax.vmap(eval_fn)
+    if sharding is None:
+        return jax.jit(f)
+    spec = tuple(sharding.spec)
+
+    def constrain(x):
+        full = P(*(spec + (None,) * (x.ndim - len(spec))))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(sharding.mesh, full))
+
+    def cohort_eval(*args):
+        return f(*jax.tree_util.tree_map(constrain, args))
+
+    return jax.jit(cohort_eval)
 
 
 def build_supervised_round(local_step_fn: Callable,
                            upload_pred: Optional[Callable[[str], bool]] = None,
-                           *, donate: bool = True):
+                           *, donate: bool = True, mesh=None,
+                           client_axes=None):
     """Fuse per-client local SGD + FedAvg + broadcast into one jitted step.
 
     ``local_step_fn(trainable, opt_state, batch) -> (trainable, opt_state,
@@ -101,10 +144,19 @@ def build_supervised_round(local_step_fn: Callable,
     where ``batches`` leaves have leading (n_clients, local_steps) axes and
     ``weights`` is the (n_clients,) outage vector.  Produces the updated
     stacked state and the (n_clients, local_steps) loss matrix.
+
+    ``mesh`` (+ optional ``client_axes``, default every non-"model" axis):
+    wrap the round in ``shard_map`` with the client axis sharded over the
+    mesh — each shard trains its local client slice, aggregation is a psum
+    of weighted partial sums, and the broadcast-back writes the replicated
+    global into every local slot.  Stacked inputs must then be sharded with
+    the matching client-axis ``NamedSharding`` and the cohort size must be
+    a multiple of the shard count (ghost-pad via ``cohort_sharding``).
     """
     pred = upload_pred or (lambda p: True)
+    axes = None if mesh is None else client_shard_axes(mesh, client_axes)
 
-    def round_step(st_trainable, st_opt, batches, weights):
+    def round_body(st_trainable, st_opt, batches, weights):
         def client(tr, op, client_batches):
             def step(carry, batch):
                 tr, op = carry
@@ -118,10 +170,15 @@ def build_supervised_round(local_step_fn: Callable,
             st_trainable, st_opt, batches)
 
         # server: weighted mean of the uploaded subtree over surviving
-        # clients, broadcast back into every client's stacked slot
-        agg = fedavg_stacked(trees.select(st_trainable, pred), weights)
+        # clients (a psum over the mesh when sharded), broadcast back into
+        # every client's stacked slot
+        agg = fedavg_stacked(trees.select(st_trainable, pred), weights,
+                             axis_names=axes)
         flat_agg = trees.flatten(agg)
-        gate = weights.sum() > 0           # all-outage round → keep local
+        wsum = weights.sum()
+        if axes is not None:
+            wsum = jax.lax.psum(wsum, axes)
+        gate = wsum > 0                    # all-outage round → keep local
 
         def put(path, loc):
             if path not in flat_agg:
@@ -133,6 +190,13 @@ def build_supervised_round(local_step_fn: Callable,
         st_trainable = trees.map_with_path(put, st_trainable)
         return st_trainable, st_opt, losses
 
+    if mesh is None:
+        round_step = round_body
+    else:
+        pc = P(axes)
+        round_step = shard_map(round_body, mesh=mesh,
+                               in_specs=(pc, pc, pc, pc),
+                               out_specs=(pc, pc, pc), check_vma=False)
     return jax.jit(round_step, donate_argnums=(0, 1) if donate else ())
 
 
@@ -140,7 +204,7 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
                     gen_len: int, quality_fn: Callable, *,
                     lambda_regs=None,
                     reg_pred: Optional[Callable[[str], bool]] = None,
-                    donate: bool = True):
+                    donate: bool = True, mesh=None, client_axes=None):
     """Fuse PFIT's per-client PPO round + masked aggregation + masked
     broadcast into one jitted step.
 
@@ -155,15 +219,22 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
     prompts, keys, alphas_help, alphas_safe, weights)`` →
     ``(st_params, st_opt, new_global, mean_rewards, mean_kls)`` with all
     per-client inputs stacked on a leading client axis.
+
+    ``mesh`` (+ optional ``client_axes``): as in ``build_supervised_round``
+    — the whole PPO round runs under ``shard_map`` with per-client state
+    sharded over the mesh, the global model replicated (``P()`` in and
+    out), and the masked aggregation's numerator/denominator ``psum``ed.
+    ``lambda_regs`` must then already cover the ghost-padded cohort.
     """
     prep, step = make_ppo_fns(model, opt, ppo_cfg, prompt_len)
     reg_pred = reg_pred or (lambda p: p.startswith("stages"))
     lams = None if lambda_regs is None else np.asarray(lambda_regs,
                                                        np.float32)
     use_reg = lams is not None and bool((lams > 0).any())
+    axes = None if mesh is None else client_shard_axes(mesh, client_axes)
 
-    def round_step(st_params, st_opt, global_params, st_masks, prompts, keys,
-                   alphas_help, alphas_safe, weights):
+    def round_body(st_params, st_opt, global_params, st_masks, prompts, keys,
+                   alphas_help, alphas_safe, weights, st_lams):
         def client(params, opt_state, grad_mask, client_prompts, key,
                    a_help, a_safe, lam):
             toks = generate(model, params, client_prompts, gen_len, key,
@@ -184,8 +255,6 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
                     grad_mask)
             return params, opt_state, reward.mean(), mean_kl
 
-        st_lams = (jnp.asarray(lams) if use_reg
-                   else jnp.zeros_like(alphas_help))
         st_params, st_opt, mean_rewards, mean_kls = jax.vmap(client)(
             st_params, st_opt, st_masks, prompts, keys, alphas_help,
             alphas_safe, st_lams)
@@ -194,9 +263,30 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
         # (all-outage → den 0 everywhere → global kept), then each client
         # resumes from the new global on its own masked entries
         new_global = masked_fedavg_stacked(global_params, st_params, st_masks,
-                                           weights)
+                                           weights, axis_names=axes)
+        wsum = weights.sum()
+        if axes is not None:
+            wsum = jax.lax.psum(wsum, axes)
         st_params = broadcast_merge_stacked(st_params, new_global, st_masks,
-                                            gate=weights.sum() > 0)
+                                            gate=wsum > 0)
         return st_params, st_opt, new_global, mean_rewards, mean_kls
+
+    if mesh is None:
+        body = round_body
+    else:
+        pc, pr = P(axes), P()
+        body = shard_map(round_body, mesh=mesh,
+                         in_specs=(pc, pc, pr, pc, pc, pc, pc, pc, pc, pc),
+                         out_specs=(pc, pc, pr, pc, pc), check_vma=False)
+
+    def round_step(st_params, st_opt, global_params, st_masks, prompts, keys,
+                   alphas_help, alphas_safe, weights):
+        # per-client λ rides in as a stacked arg so the shard_map slices it
+        # with the rest of the client axis (a closed-over vector would stay
+        # whole-cohort-sized and break the local vmap)
+        st_lams = (jnp.asarray(lams) if use_reg
+                   else jnp.zeros_like(alphas_help))
+        return body(st_params, st_opt, global_params, st_masks, prompts,
+                    keys, alphas_help, alphas_safe, weights, st_lams)
 
     return jax.jit(round_step, donate_argnums=(0, 1) if donate else ())

@@ -25,6 +25,11 @@ training threads the rank-r factors next to the frozen global (unbatched
 under the client-vmap) and eval generation serves the personalized LoRA
 unmerged through prefill + decode.  ``PFITConfig(factored=False)`` keeps
 the merged oracle.
+
+``run_pfit(cfg, mesh=...)`` shards the fused round over the device mesh
+(``shard_map`` on the stacked client axis, masked aggregation as psums,
+global model + reward models replicated, ghost-padded cohorts) — the same
+pathway as ``run_pftt``; see ``core/cohort.py``.
 """
 from __future__ import annotations
 
@@ -50,7 +55,7 @@ from repro.optim import adamw
 from repro.rlhf.ppo import PPOConfig, PPOTrainer
 from repro.rlhf.reward_model import RewardModel, train_reward_model
 from repro.rlhf.rollout import generate
-from repro.sharding import MeshCtx
+from repro.sharding import MeshCtx, cohort_sharding
 from repro.wireless import CommLedger, RayleighChannel, tree_bytes
 
 METHODS = ("pfit", "sfl", "pfl", "shepherd")
@@ -122,7 +127,9 @@ def _pretrain_policy(key, model, params, corpus, steps, lr, batch, verbose):
     return params
 
 
-def run_pfit(cfg: PFITConfig) -> Dict:
+def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
+    """``mesh`` (optional ``jax.sharding.Mesh``): shard the fused cohort
+    round across it (engine path only) — see the module docstring."""
     assert cfg.method in METHODS
     ms = _method_settings(cfg)
     key = jax.random.PRNGKey(cfg.seed)
@@ -253,24 +260,41 @@ def run_pfit(cfg: PFITConfig) -> Dict:
                                           prefs[ci].alpha_safe).mean()))
         return float(np.mean(vals))
 
-    # ---- cohort engine: the whole round is one fused jitted step
+    # ---- cohort engine: the whole round is one fused jitted step; with a
+    # mesh the stacked client axis is sharded over it (ghost-padded to the
+    # shard count, ghosts carrying zero aggregation weight)
     use_engine = cfg.engine
+    cs = cohort_sharding(mesh, cfg.n_clients, client_axes) \
+        if (mesh is not None and use_engine) else None
     if use_engine:
+        pad = cs.pad if cs is not None else (lambda xs: xs)
+        mesh_kw = dict(mesh=cs.mesh if cs is not None else None,
+                       client_axes=cs.axes if cs is not None else None)
+        _shard = (lambda x: jax.device_put(x, cs.named)) \
+            if cs is not None else (lambda x: x)
         if cfg.method == "shepherd":
-            round_step = build_supervised_round(shepherd_local_step)
-            cohort_tr = trees.stack([cl["lora"] for cl in clients])
-            cohort_opt = trees.stack([cl["opt_state"] for cl in clients])
+            round_step = build_supervised_round(shepherd_local_step,
+                                                **mesh_kw)
+            cohort_tr = _shard(trees.stack(pad([cl["lora"]
+                                                for cl in clients])))
+            cohort_opt = _shard(trees.stack(pad([cl["opt_state"]
+                                                 for cl in clients])))
             payloads = [tree_bytes(cl["lora"]) for cl in clients]
-            stacker = HostBatchStacker()
+            stacker = HostBatchStacker(
+                sharding=cs.named if cs is not None else None)
         else:
             ppo_round_step = build_ppo_round(
                 model, opt, cfg.ppo, cfg.prompt_len, cfg.gen_len, quality_fn,
-                lambda_regs=[p.lambda_reg for p in prefs])
-            cohort_tr = trees.stack([cl["params"] for cl in clients])
-            cohort_opt = trees.stack([cl["opt_state"] for cl in clients])
-            st_masks = trees.stack(client_masks)
-            alphas_h = jnp.asarray([p.alpha_help for p in prefs])
-            alphas_s = jnp.asarray([p.alpha_safe for p in prefs])
+                lambda_regs=pad([p.lambda_reg for p in prefs]), **mesh_kw)
+            cohort_tr = _shard(trees.stack(pad([cl["params"]
+                                                for cl in clients])))
+            cohort_opt = _shard(trees.stack(pad([cl["opt_state"]
+                                                 for cl in clients])))
+            st_masks = _shard(trees.stack(pad(client_masks)))
+            alphas_h = _shard(jnp.asarray(pad([p.alpha_help for p in prefs])))
+            alphas_s = _shard(jnp.asarray(pad([p.alpha_safe for p in prefs])))
+            if cs is not None:   # global model: explicitly replicated
+                global_params = jax.device_put(global_params, cs.replicated)
             payloads = [tree_bytes(clients[ci]["params"],
                                    nonzero_mask=client_masks[ci])
                         for ci in range(cfg.n_clients)]
@@ -281,7 +305,9 @@ def run_pfit(cfg: PFITConfig) -> Dict:
         if use_engine:
             reports = [channel.uplink(payloads[ci], gain=gains[ci])
                        for ci in range(cfg.n_clients)]
-            weights = jnp.asarray(channel.outage_weights(gains))
+            w = channel.outage_weights(gains)
+            weights = jax.device_put(cs.pad_weights(w), cs.named) \
+                if cs is not None else jnp.asarray(w)
             if cfg.method == "shepherd":
                 def shepherd_batch(ci):
                     s = corpus.sample(cfg.rollout_batch,
@@ -290,22 +316,23 @@ def run_pfit(cfg: PFITConfig) -> Dict:
                     return {"tokens": s["tokens"][:, :-1],
                             "labels": s["tokens"][:, 1:],
                             "mask": s["mask"][:, 1:]}
-                batches = stacker(
+                batches = stacker(pad(
                     [[shepherd_batch(ci) for _ in range(cfg.shepherd_steps)]
-                     for ci in range(cfg.n_clients)])
+                     for ci in range(cfg.n_clients)]))
                 cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
                                                       batches, weights)
                 for cl, lo in zip(clients,
                                   trees.unstack(cohort_tr, cfg.n_clients)):
                     cl["lora"] = lo
             else:
-                prompts = jnp.asarray(np.stack(
+                prompts = _shard(jnp.asarray(np.stack(pad(
                     [corpus.sample(cfg.rollout_batch,
                                    topic_probs=topic_prefs[ci],
                                    rng=rng)["tokens"][:, :cfg.prompt_len]
-                     for ci in range(cfg.n_clients)]))
-                keys = jnp.stack([jax.random.fold_in(key, rnd * 17 + ci)
-                                  for ci in range(cfg.n_clients)])
+                     for ci in range(cfg.n_clients)]))))
+                keys = _shard(jnp.stack(pad(
+                    [jax.random.fold_in(key, rnd * 17 + ci)
+                     for ci in range(cfg.n_clients)])))
                 (cohort_tr, cohort_opt, global_params, _,
                  _) = ppo_round_step(cohort_tr, cohort_opt, global_params,
                                      st_masks, prompts, keys, alphas_h,

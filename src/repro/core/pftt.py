@@ -27,6 +27,15 @@ factors, not n_clients × full weights.  ``PFTTConfig(factored=False)`` is
 the merged oracle.  Per-round eval pads every client's test set to one
 validity-masked shape and scores the stacked cohort in ONE jitted vmapped
 dispatch (``core/cohort.py::build_cohort_eval``).
+
+``run_pftt(cfg, mesh=...)`` shards the fused round across the device mesh:
+the stacked client axis is split over the mesh's non-"model" axes via
+``shard_map`` (aggregation → psum of weighted partial sums), cohort state
+and the round's host batches are placed with a client-axis
+``NamedSharding`` (per-shard transfers), and cohorts that don't divide the
+shard count are padded with zero-weight ghost clients the aggregation
+weight vector masks out.  The frozen base stays replicated; only trainable
+state and optimizer moments carry the sharded client axis.
 """
 from __future__ import annotations
 
@@ -49,7 +58,7 @@ from repro.data.synthetic import ClassificationCorpus
 from repro.models import Model
 from repro.models import peft as peft_mod
 from repro.optim import adamw
-from repro.sharding import MeshCtx
+from repro.sharding import MeshCtx, cohort_sharding
 from repro.wireless import CommLedger, RayleighChannel, tree_bytes
 
 METHODS = ("pftt", "vanilla_fl", "fedbert", "fedlora")
@@ -135,7 +144,11 @@ def _merge_trainable(method: str, base_params, trainable, peft_cfg):
     return full
 
 
-def run_pftt(cfg: PFTTConfig) -> Dict:
+def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
+    """``mesh`` (optional ``jax.sharding.Mesh``): shard the fused cohort
+    round across it — see the module docstring.  ``client_axes`` overrides
+    which mesh axes carry the client dim (default: every non-"model" axis).
+    Ragged cohorts fall back to the legacy loop and ignore the mesh."""
     assert cfg.method in METHODS, cfg.method
     rng = np.random.RandomState(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
@@ -231,22 +244,33 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
 
     local_step_jit = jax.jit(local_step)     # legacy per-client path
 
+    # uniform batch shapes → one fused round step; ragged cohorts keep the
+    # legacy per-client loop (vmap needs a common stacked shape).  The
+    # sharded engine (mesh=) only applies on the fused path: ghost-pad the
+    # cohort to a multiple of the shard count, zero aggregation weight.
+    use_engine = cfg.engine and len(set(client_batch_sizes)) == 1
+    cs = cohort_sharding(mesh, cfg.n_clients, client_axes) \
+        if (mesh is not None and use_engine) else None
+    n_rows = cs.total if cs is not None else cfg.n_clients
+
     # ---- engine-side eval: every client's test set padded to one common
     # shape (validity-masked) and the WHOLE stacked cohort scored in ONE
     # jitted vmapped dispatch per round — O(1) dispatches regardless of
-    # cohort size (and no per-test-set-shape retraces)
+    # cohort size (and no per-test-set-shape retraces).  Ghost rows are
+    # all-invalid, so they drop out of the per-client accuracy list.
     max_test = max([len(te["label"]) for te in client_test] + [1])
     seq = client_test[0]["tokens"].shape[1]
-    t_toks = np.zeros((cfg.n_clients, max_test, seq), np.int32)
-    t_labels = np.zeros((cfg.n_clients, max_test), np.int32)
-    t_valid = np.zeros((cfg.n_clients, max_test), np.float32)
+    t_toks = np.zeros((n_rows, max_test, seq), np.int32)
+    t_labels = np.zeros((n_rows, max_test), np.int32)
+    t_valid = np.zeros((n_rows, max_test), np.float32)
     for ci, te in enumerate(client_test):
         n = len(te["label"])
         t_toks[ci, :n] = te["tokens"]
         t_labels[ci, :n] = te["label"]
         t_valid[ci, :n] = 1.0
-    t_toks, t_labels, t_valid = (jnp.asarray(t_toks), jnp.asarray(t_labels),
-                                 jnp.asarray(t_valid))
+    _put = (lambda x: jax.device_put(x, cs.named)) if cs is not None \
+        else jnp.asarray
+    t_toks, t_labels, t_valid = _put(t_toks), _put(t_labels), _put(t_valid)
 
     def eval_client(trainable, tokens, label, valid):
         full, lora, ls = _effective(trainable)
@@ -255,7 +279,8 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
         correct = (pred == label).astype(jnp.float32) * valid
         return correct.sum(), valid.sum()
 
-    eval_cohort = build_cohort_eval(eval_client)
+    eval_cohort = build_cohort_eval(
+        eval_client, sharding=cs.named if cs is not None else None)
     eval_dispatches = [0]
 
     def eval_round_accs(stacked_trainable):
@@ -280,19 +305,20 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
             return tree_bytes(shared) + act
         return tree_bytes(shared)
 
-    # uniform batch shapes → one fused round step; ragged cohorts keep the
-    # legacy per-client loop (vmap needs a common stacked shape)
-    use_engine = cfg.engine and len(set(client_batch_sizes)) == 1
     if use_engine:
-        round_step = build_supervised_round(local_step, upload_pred)
-        cohort_tr = trees.stack([cl["trainable"] for cl in clients])
-        cohort_opt = trees.stack([cl["opt_state"] for cl in clients])
+        round_step = build_supervised_round(
+            local_step, upload_pred,
+            mesh=cs.mesh if cs is not None else None,
+            client_axes=cs.axes if cs is not None else None)
+        pad = cs.pad if cs is not None else (lambda xs: xs)
+        cohort_tr = trees.stack(pad([cl["trainable"] for cl in clients]))
+        cohort_opt = trees.stack(pad([cl["opt_state"] for cl in clients]))
+        if cs is not None:     # client axis over the mesh, base replicated
+            cohort_tr = jax.device_put(cohort_tr, cs.named)
+            cohort_opt = jax.device_put(cohort_opt, cs.named)
         payloads = [payload_bytes(cl["trainable"]) for cl in clients]
-        stacker = HostBatchStacker()   # host buffer reused round-over-round
-
-    def _unstack_into_clients():
-        for cl, tr in zip(clients, trees.unstack(cohort_tr, cfg.n_clients)):
-            cl["trainable"] = tr
+        stacker = HostBatchStacker(   # host buffer reused round-over-round
+            sharding=cs.named if cs is not None else None)
 
     for rnd in range(cfg.rounds):
         gains = channel.realize(cfg.n_clients)
@@ -300,16 +326,19 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
         if use_engine:
             # host side: draw the round's batches in the legacy (client,
             # step) order into the preallocated stacked buffer, one
-            # device_put, and run ONE compiled round step
-            batches = stacker(
+            # (per-shard when meshed) device_put, and run ONE compiled
+            # round step; ghost clients reuse client 0's batches and get
+            # zero aggregation weight
+            batches = stacker(pad(
                 [[next(client_iters[ci]) for _ in range(cfg.local_steps)]
-                 for ci in range(cfg.n_clients)])
+                 for ci in range(cfg.n_clients)]))
             reports = [channel.uplink(payloads[ci], gain=gains[ci])
                        for ci in range(cfg.n_clients)]
-            weights = jnp.asarray(channel.outage_weights(gains))
+            w = channel.outage_weights(gains)
+            weights = jax.device_put(cs.pad_weights(w), cs.named) \
+                if cs is not None else jnp.asarray(w)
             cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
                                                   batches, weights)
-            _unstack_into_clients()
         else:
             for ci, cl in enumerate(clients):
                 for _ in range(cfg.local_steps):
@@ -339,6 +368,10 @@ def run_pftt(cfg: PFTTConfig) -> Dict:
             print(f"[pftt:{cfg.method}] round {rnd} acc {accs_per_round[-1]:.3f} "
                   f"bytes {ledger.rounds[-1]['bytes']:,} "
                   f"outages {ledger.rounds[-1]['outages']}")
+
+    if use_engine:   # sync the per-client dicts once, after the last round
+        for cl, tr in zip(clients, trees.unstack(cohort_tr, cfg.n_clients)):
+            cl["trainable"] = tr
 
     return {
         "method": cfg.method,

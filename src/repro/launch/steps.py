@@ -117,6 +117,12 @@ def make_fl_round_step(model: Model, peft_cfg: peft_mod.PEFTConfig,
     reduction lowers to the cross-pod all-reduce that *is* the paper's
     communication step, and its payload is exactly the adapter subtree.
 
+    The simulation engine now executes this same layout for real:
+    ``core/cohort.py`` wraps its fused round in ``shard_map`` with the
+    client axis over ("pod","data") and the stacked aggregation as explicit
+    psums (``run_pftt``/``run_pfit`` ``mesh=``) — this builder remains the
+    autodiff-structured statement the dry-run lowers/costs.
+
     ``factored`` (default) runs the LoRA path unmerged under the vmap, so
     the frozen base + adapters stay UNBATCHED (broadcast) and per-client
     state is just the rank-r factors — the memory/FLOP enabler for large

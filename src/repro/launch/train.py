@@ -3,6 +3,16 @@ TPU pod in production — the same pjit program the dry-run compiles).
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
         --reduced --steps 50 --batch 8 --seq 128
+
+``--fl-clients N`` instead runs the federated cohort engine with the
+stacked client axis sharded over every available device (``shard_map``
+round, psum aggregation — core/cohort.py).  The FL workload is PFTT's
+reduced-roberta cohort (fixed backbone: ``--arch``/``--steps``/``--seq``
+don't apply; ``--batch``/``--lr``/``--fl-rounds`` do):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.train --arch roberta-base --fl-clients 8 \
+        --fl-rounds 3
 """
 import argparse
 import time
@@ -28,10 +38,28 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--data-axis", type=int, default=0,
                     help="data-parallel axis size (0 → n_devices)")
+    ap.add_argument("--fl-clients", type=int, default=0,
+                    help="run a federated PFTT cohort of this size with the "
+                         "client axis sharded over all devices (0 → off)")
+    ap.add_argument("--fl-rounds", type=int, default=3)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
+    if args.fl_clients:
+        from repro.core.pftt import PFTTConfig, run_pftt
+        print(f"federated cohort demo (PFTT reduced-roberta workload; "
+              f"--arch/--steps/--seq ignored) on {n_dev} device(s)")
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        cfg = PFTTConfig(n_clients=args.fl_clients, rounds=args.fl_rounds,
+                         batch=args.batch, lr=args.lr, local_steps=5,
+                         pretrain_steps=50, samples_per_client=200,
+                         verbose=True)
+        res = run_pftt(cfg, mesh=mesh, client_axes=("data",))
+        print(f"sharded cohort over {n_dev} device(s): final acc "
+              f"{res['final_acc']:.3f} mean round bytes "
+              f"{res['mean_round_bytes']:,.0f}")
+        return
     d = args.data_axis or n_dev
     mesh = jax.make_mesh((d, n_dev // d), ("data", "model"))
     meshctx = MeshCtx(mesh=mesh)

@@ -41,6 +41,79 @@ def use_mesh(mesh: Mesh):
     return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
 
 
+# ---------------------------------------------------------------------------
+# Cohort (client-axis) sharding — the federated engine's device layout
+# ---------------------------------------------------------------------------
+
+
+def client_shard_axes(mesh: Mesh, client_axes=None) -> Tuple[str, ...]:
+    """Mesh axes the stacked client dim shards over: explicit ``client_axes``
+    if given, else every non-"model" axis (("pod","data") on the production
+    mesh, ("data",) on a flat one) — tensor parallelism stays orthogonal."""
+    if client_axes is not None:
+        return tuple(client_axes)
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return axes or tuple(mesh.axis_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSharding:
+    """Device layout for one stacked federated cohort.
+
+    The leading client axis of every stacked leaf is sharded over
+    ``axes``; cohorts whose size does not divide the shard count are
+    padded with **ghost clients** — copies of client 0 that train
+    normally but carry aggregation weight 0, so the weighted-mean /
+    masked-mean math (and its all-outage gate) excludes them exactly
+    (copies, not zeros: a ghost's forward must be as numerically
+    well-behaved as a real client's, since NaN·0 = NaN would poison the
+    psum).  Everything without a client axis (frozen base, global model)
+    stays replicated."""
+
+    mesh: Mesh
+    axes: Tuple[str, ...]
+    n_clients: int       # real cohort size
+    total: int           # ghost-padded size (multiple of n_shards)
+
+    @property
+    def n_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    @property
+    def n_pad(self) -> int:
+        return self.total - self.n_clients
+
+    @property
+    def named(self) -> NamedSharding:
+        """Client-axis sharding (prefix spec: dim 0 over ``axes``)."""
+        return NamedSharding(self.mesh, P(self.axes))
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def pad(self, per_client: Sequence) -> list:
+        """[n_clients] list → [total] list, ghosts = copies of entry 0."""
+        per_client = list(per_client)
+        assert len(per_client) == self.n_clients, (len(per_client),
+                                                   self.n_clients)
+        return per_client + [per_client[0]] * self.n_pad
+
+    def pad_weights(self, weights) -> np.ndarray:
+        """Append zero aggregation weight for every ghost client."""
+        w = np.asarray(weights, np.float32)
+        return np.concatenate([w, np.zeros((self.n_pad,), np.float32)])
+
+
+def cohort_sharding(mesh: Mesh, n_clients: int,
+                    client_axes=None) -> CohortSharding:
+    axes = client_shard_axes(mesh, client_axes)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    total = -(-n_clients // n_shards) * n_shards
+    return CohortSharding(mesh=mesh, axes=axes, n_clients=n_clients,
+                          total=total)
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshCtx:
     mesh: Mesh

@@ -15,12 +15,14 @@ def pftt_result():
                                samples_per_client=150, seed=0))
 
 
+@pytest.mark.slow
 def test_pftt_learns(pftt_result):
     accs = pftt_result["acc_per_round"]
     assert accs[-1] > accs[0] + 0.15, accs
     assert accs[-1] > 0.55, accs
 
 
+@pytest.mark.slow
 def test_pftt_comm_is_partial(pftt_result):
     """PFTT uploads only adapters+head — far below full-model bytes."""
     from repro.configs import get_config
@@ -29,6 +31,7 @@ def test_pftt_comm_is_partial(pftt_result):
     assert pftt_result["mean_round_bytes"] < 0.2 * full_bytes * 4  # 4 clients
 
 
+@pytest.mark.slow
 def test_vanilla_fl_uploads_more_than_pftt(pftt_result):
     from repro.core.pftt import PFTTConfig, run_pftt
     res_v = run_pftt(PFTTConfig(method="vanilla_fl", rounds=1, local_steps=1,
@@ -37,6 +40,7 @@ def test_vanilla_fl_uploads_more_than_pftt(pftt_result):
     assert res_v["mean_round_bytes"] > pftt_result["mean_round_bytes"]
 
 
+@pytest.mark.slow
 def test_pfit_ppo_improves_reward():
     """Isolated PPO against a ground-truth topical reward must improve
     (fast, deterministic version of the Fig. 4 trend)."""
@@ -104,6 +108,7 @@ def test_generic_fl_runner_aggregates():
     assert abs(w0 - 2.0) < 0.2          # near the mean of targets
 
 
+@pytest.mark.slow
 def test_pfit_short_federated_run():
     """2-round federated PFIT end-to-end (wiring: channel, masks, masked
     aggregation, eval) — smoke-level runtime."""
