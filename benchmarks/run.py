@@ -45,6 +45,11 @@ def _benches():
         from benchmarks import cohort_shard_bench
         cohort_shard_bench.main(quick=quick, out="BENCH_cohort_shard.json")
 
+    def uplink(quick):
+        print("\n# === compressed factored uplink: bytes/delay/acc per codec ===")
+        from benchmarks import uplink_bench
+        uplink_bench.main(quick=quick, out="BENCH_uplink.json")
+
     def fig5(quick):
         print("\n# === Fig. 5: PFTT accuracy / communication ===")
         from benchmarks import fig5_pftt
@@ -65,6 +70,7 @@ def _benches():
             "fl_engine": fl_engine,
             "lora_path": lora_path,
             "cohort_shard": cohort_shard,
+            "uplink": uplink,
             "fig5": fig5,
             "fig4": fig4,
             "roofline": lambda quick: roofline()}

@@ -1,0 +1,13 @@
+"""Wireless uplink payload codec subsystem (see ``docs/comms.md``).
+
+``codec`` — tree-level encode/decode + bit accounting + ``ChannelBudget``;
+``quantize`` — stochastic-rounding int8/int4 per-channel quantization;
+``sketch`` — top-k and count-sketch codecs;
+``factored_agg`` — SVD re-projection LoRA aggregation (no densification).
+"""
+from repro.comms.codec import (CODEC_NAMES, ChannelBudget,  # noqa: F401
+                               CountSketchCodec, QuantCodec, TopKCodec,
+                               get_codec, payload_bits_upper_bound,
+                               roundtrip)
+from repro.comms.factored_agg import (dense_rank_r_oracle,  # noqa: F401
+                                      factored_fedavg_tree, svd_reproject)

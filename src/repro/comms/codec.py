@@ -1,0 +1,238 @@
+"""Uplink payload codecs: the wireless compression contract.
+
+A codec is a *pure, jittable, single-client* encode→decode pair over a
+trainable pytree plus a bit-accounting rule; the cohort engine
+(``core/cohort.py``) vmaps ``roundtrip`` over the stacked client axis
+INSIDE the compiled round step, so compression, the lossy decode the server
+aggregates, and the per-client payload-bit count all ride the same fused
+program (and compose with ``shard_map`` + ghost-padded cohorts unchanged).
+
+Codec contract
+--------------
+* ``encode_leaf(key, delta, leaf_seed) -> enc`` / ``decode_leaf(enc, shape,
+  leaf_seed) -> deltâ`` — leafwise, static output shapes.
+* ``leaf_bits(enc, delta_shape, weight) -> f32 scalar`` — the uplink charge
+  for that leaf.  Quantizers charge empirical-entropy bits (idealized
+  adaptive arithmetic coder, ≤ qbits/element) + 16 bits per per-channel
+  scale; sketches charge their static payload.
+* Clients encode the **delta against the last server-known reference**
+  (``ref=`` — the round-input value of the uploaded subtree, i.e. the
+  previous broadcast global on every non-outage round).  Deltas are small
+  and centred, which is what makes 4-bit stochastic rounding and top-k
+  sparsification accurate.  After an all-outage round the simulation's
+  per-client reference corresponds to the error-feedback bookkeeping a real
+  deployment would keep; see ``docs/comms.md``.
+* Leaves that are not worth coding (non-float, or smaller than
+  ``MIN_CODED_SIZE`` — e.g. LoRA's ``(repeats, 1, 1)`` enable masks) are
+  charged ``RAW_BITS``/element and pass through exactly.
+
+``ChannelBudget`` is the bridge to the wireless layer: encoded payload
+bits → ``RayleighChannel.uplink`` delay/outage plus transmit energy
+(``tx_power_w · delay``), replacing the raw ``tree_bytes`` charge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.comms import quantize, sketch
+from repro.wireless.channel import ChannelReport, RayleighChannel
+
+MIN_CODED_SIZE = 16    # leaves smaller than this ride raw (enable masks…)
+SCALE_BITS = 16        # per-channel scales transmitted as bf16
+RAW_BITS = 32          # uncoded float element
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantCodec:
+    """Stochastic-rounding int8/int4 per-channel quantization
+    (``comms.quantize``)."""
+    name: str
+    qbits: int
+    entropy_coded: bool = True
+
+    def encode_leaf(self, key, delta, leaf_seed: int):
+        return quantize.sr_quantize(key, delta, self.qbits)
+
+    def decode_leaf(self, enc, shape, leaf_seed: int):
+        return quantize.sr_dequantize(enc)
+
+    def leaf_bits(self, enc, delta_shape, weight):
+        if self.entropy_coded:
+            data = quantize.symbol_entropy_bits(enc["q"], self.qbits, weight)
+        else:
+            data = (jnp.broadcast_to(weight, delta_shape)
+                    .astype(jnp.float32).sum() * float(self.qbits))
+        # per-channel scales ride only for channels that transmit at all
+        # (a fully-masked leaf/channel sends nothing — weight-0 elements
+        # are excluded from the bit charge, scales included)
+        w = jnp.broadcast_to(weight, delta_shape)
+        scale = enc["scale"]
+        if scale.ndim == 0:
+            nch = (w.max() > 0).astype(jnp.float32)
+        else:
+            ind = w
+            for ax, s in enumerate(scale.shape):
+                if s == 1:
+                    ind = ind.max(axis=ax, keepdims=True)
+            nch = (ind > 0).astype(jnp.float32).sum()
+        return data + nch * SCALE_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec:
+    """Top-k sparsification: k largest-|delta| entries as (f16 value, int32
+    index) pairs (``comms.sketch``).  Static payload."""
+    name: str = "sketch"
+    frac: float = 0.1
+    value_bits: int = 16
+    index_bits: int = 32
+
+    def encode_leaf(self, key, delta, leaf_seed: int):
+        return sketch.topk_encode(delta, self.frac)
+
+    def decode_leaf(self, enc, shape, leaf_seed: int):
+        return sketch.topk_decode(enc, shape)
+
+    def leaf_bits(self, enc, delta_shape, weight):
+        # at most k (value, index) pairs, and never more than the number of
+        # transmittable (weight>0) elements
+        k = enc["idx"].shape[0]
+        nnz = (jnp.broadcast_to(weight, delta_shape) > 0) \
+            .astype(jnp.float32).sum()
+        return jnp.minimum(float(k), nnz) * (self.value_bits
+                                             + self.index_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class CountSketchCodec:
+    """Count-sketch projection into ``rows`` hash rows (``comms.sketch``);
+    hashes derive from the leaf's tree position, shared server-side for
+    free.  Faithful only on heavy-hitter-dominated deltas."""
+    name: str = "countsketch"
+    ratio: float = 0.25
+    rows: int = 3
+
+    def encode_leaf(self, key, delta, leaf_seed: int):
+        return sketch.count_sketch_encode(delta, leaf_seed=leaf_seed,
+                                          rows=self.rows, ratio=self.ratio)
+
+    def decode_leaf(self, enc, shape, leaf_seed: int):
+        return sketch.count_sketch_decode(enc, shape, leaf_seed=leaf_seed)
+
+    def leaf_bits(self, enc, delta_shape, weight):
+        # a fully-masked leaf projects nothing: no sketch on the air
+        any_tx = (jnp.broadcast_to(weight, delta_shape).max() > 0) \
+            .astype(jnp.float32)
+        return any_tx * enc["table"].size * 32
+
+
+def get_codec(name: Optional[str], **kw):
+    """Codec registry: none | int8 | int4 | sketch (top-k) | countsketch."""
+    if name is None or name == "none":
+        return None
+    if name == "int8":
+        return QuantCodec(name="int8", qbits=8, **kw)
+    if name == "int4":
+        return QuantCodec(name="int4", qbits=4, **kw)
+    if name in ("sketch", "topk"):
+        return TopKCodec(name="sketch", **kw)
+    if name == "countsketch":
+        return CountSketchCodec(**kw)
+    raise ValueError(f"unknown uplink codec {name!r}; choose from "
+                     "none,int8,int4,sketch,countsketch")
+
+CODEC_NAMES = ("none", "int8", "int4", "sketch", "countsketch")
+
+
+def _codable(x) -> bool:
+    return (hasattr(x, "shape") and x.ndim >= 1
+            and jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+            and x.size >= MIN_CODED_SIZE)
+
+
+def roundtrip(codec, key, tree, *, ref=None, bit_weights=None):
+    """Encode→decode one client's upload tree; returns ``(decoded_tree,
+    payload_bits)`` with ``payload_bits`` a f32 scalar.
+
+    ``ref`` (same structure, or None): the server-known reference — leaves
+    are coded as ``leaf - ref`` and decoded as ``ref + deltâ``.
+    ``bit_weights`` (same structure of broadcastable 0/1 masks, or None):
+    elements with weight 0 are not transmitted — their delta is zeroed
+    before encoding (decode preserves ``ref`` there) and they are excluded
+    from the bit charge.  Vmap this over the stacked client axis to run the
+    whole cohort's uplink inside one compiled round step."""
+    if ref is None:
+        ref = jax.tree_util.tree_map(lambda x: jnp.zeros((), x.dtype), tree)
+    if bit_weights is None:
+        bit_weights = jax.tree_util.tree_map(
+            lambda x: jnp.ones((), jnp.float32), tree)
+    seed = [0]
+    bits_acc = []
+
+    def one(x, rf, bw):
+        i = seed[0]
+        seed[0] += 1
+        bwb = jnp.broadcast_to(bw, x.shape).astype(jnp.float32)
+        if not _codable(x):
+            bits_acc.append(bwb.sum() * RAW_BITS)
+            # untransmitted (weight-0) lanes keep the server-known reference
+            return jnp.where(bwb > 0, x, rf).astype(x.dtype)
+        delta = (x - rf).astype(jnp.float32) * (bwb > 0)
+        enc = codec.encode_leaf(jax.random.fold_in(key, i), delta, i)
+        bits_acc.append(codec.leaf_bits(enc, x.shape, bwb))
+        dec = codec.decode_leaf(enc, x.shape, i)
+        return (rf + dec).astype(x.dtype)
+
+    out = jax.tree_util.tree_map(one, tree, ref, bit_weights)
+    total = jnp.asarray(0.0, jnp.float32)
+    for b in bits_acc:
+        total = total + jnp.asarray(b, jnp.float32)
+    return out, total
+
+
+def payload_bits_upper_bound(codec, tree) -> float:
+    """Static (shape-only) worst-case payload bits — the flat charge before
+    entropy coding; handy for capacity planning and sanity checks."""
+    total = 0.0
+    for x in jax.tree_util.tree_leaves(tree):
+        if not hasattr(x, "size"):
+            continue
+        if not _codable(x):
+            total += x.size * RAW_BITS
+            continue
+        if isinstance(codec, QuantCodec):
+            total += x.size * codec.qbits
+            total += quantize.channel_scale(
+                jnp.zeros(x.shape), codec.qbits).size * SCALE_BITS
+        elif isinstance(codec, TopKCodec):
+            total += sketch.topk_k(x.size, codec.frac) * (
+                codec.value_bits + codec.index_bits)
+        elif isinstance(codec, CountSketchCodec):
+            b = max(1, -(-int(round(x.size * codec.ratio)) // codec.rows))
+            total += codec.rows * b * 32
+        else:
+            total += x.size * RAW_BITS
+    return float(total)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelBudget:
+    """Bits → wireless budget bridge: encoded payload bits become per-client
+    delay/outage through ``RayleighChannel.uplink`` and transmit energy
+    ``tx_power_w · delay`` — this replaces the raw ``tree_bytes`` charge in
+    the round loops."""
+    channel: RayleighChannel
+    tx_power_w: float = 0.5
+
+    def report(self, payload_bits: float, gain: float) -> ChannelReport:
+        rep = self.channel.uplink(float(payload_bits) / 8.0, gain=gain)
+        energy = 0.0 if rep.outage else self.tx_power_w * rep.delay_s
+        return dataclasses.replace(rep, energy_j=energy)
+
+    def round_reports(self, bits_per_client: Sequence[float],
+                      gains) -> list:
+        return [self.report(b, g) for b, g in zip(bits_per_client, gains)]

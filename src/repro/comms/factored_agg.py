@@ -1,0 +1,128 @@
+"""Server-side LoRA factor aggregation WITHOUT densification.
+
+The naive federated treatment of LoRA uploads averages the factors
+elementwise, but ``avg_i(A_i·B_i) ≠ avg_i(A_i)·avg_i(B_i)`` — the mean of
+the clients' low-rank *updates* has rank up to ``n·r`` and averaging A and B
+separately is not even its best rank-r approximation.  The obvious fix
+(materialize every ``A_i·B_i``, average, re-factor) costs an O(d²) dense
+matrix on the server — exactly the memory the factored execution path
+(PR 3) got rid of.
+
+``svd_reproject`` computes the **best rank-r factorization of the weighted
+mean update** while only ever touching (d × n·r) matrices:
+
+    Δ = Σ_i ŵ_i A_i B_i = L·R,   L = [√ŵ_i A_i]_i  (din, m),  m = n·r
+                                  R = [√ŵ_i B_i]_i  (m, dout)
+    L = Q_l S_l   (thin QR)        R^T = Q_r S_r    (thin QR)
+    U Σ V^T = svd(S_l S_r^T)       (m × m — tiny)
+    A' = Q_l U_r √Σ_r,  B' = √Σ_r V_r^T Q_r^T       (rank r)
+
+so ``A'·B'`` equals the rank-r-truncated SVD of Δ without Δ ever existing.
+Cost is O(d·m²), memory O(d·m) — for a 4-client rank-8 cohort on a 4096-d
+model that is 128k floats instead of 16M.
+
+``factored_fedavg_tree`` applies this to every ``{'a','b'}`` sibling pair
+in an uploaded tree (other leaves get the plain weighted mean) and is what
+``core.aggregation.factored_fedavg_stacked`` dispatches to.  Under the
+sharded engine the per-shard factor slices are ``all_gather``ed over the
+client mesh axes first — factors are rank-r tiny, so gathering them is
+cheap — and every shard computes the identical replicated re-projection.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import trees
+
+
+def _normalized_weights(n: int, weights):
+    if weights is None:
+        return jnp.full((n,), 1.0 / n, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    return w / jnp.maximum(w.sum(), 1e-12)
+
+
+def _gather_clients(x, axis_names):
+    return jax.lax.all_gather(x, axis_names, axis=0, tiled=True)
+
+
+def svd_reproject(st_a, st_b, weights=None, rank: Optional[int] = None, *,
+                  axis_names=None):
+    """Stacked factors ``A (n, …, din, r)``, ``B (n, …, r, dout)`` and an
+    (n,) weight vector → rank-``rank`` (default r) factors ``(A', B')`` of
+    the weighted-mean update ``Σ ŵ_i A_i B_i``, never materializing any
+    (din, dout) matrix.  Batched over leading dims (the layer-scan repeat
+    axis).  ``axis_names``: inside ``shard_map``, all-gather the per-shard
+    client slices over these mesh axes first (replicated result)."""
+    if axis_names is not None:
+        st_a = _gather_clients(st_a, axis_names)
+        st_b = _gather_clients(st_b, axis_names)
+        weights = _gather_clients(jnp.asarray(weights, jnp.float32),
+                                  axis_names) if weights is not None else None
+    n, r = st_a.shape[0], st_a.shape[-1]
+    rank = r if rank is None else rank
+    w = _normalized_weights(n, weights)
+    sw = jnp.sqrt(w).reshape((n,) + (1,) * (st_a.ndim - 1))
+    a = (st_a.astype(jnp.float32) * sw)
+    b = (st_b.astype(jnp.float32) * sw)
+    # (n, …, din, r) → (…, din, n·r)  /  (n, …, r, dout) → (…, n·r, dout)
+    l = jnp.moveaxis(a, 0, -2)
+    l = l.reshape(l.shape[:-3] + (l.shape[-3], n * r))
+    rt = jnp.moveaxis(b, 0, -3)
+    rt = rt.reshape(rt.shape[:-3] + (n * r, rt.shape[-1]))
+    ql, sl = jnp.linalg.qr(l)                             # (…, din, m)
+    qr_, sr_ = jnp.linalg.qr(jnp.swapaxes(rt, -1, -2))    # (…, dout, m)
+    u, s, vt = jnp.linalg.svd(sl @ jnp.swapaxes(sr_, -1, -2),
+                              full_matrices=False)        # m × m core
+    root = jnp.sqrt(s[..., :rank])
+    a_new = (ql @ u[..., :, :rank]) * root[..., None, :]
+    b_new = (root[..., :, None] * vt[..., :rank, :]) @ \
+        jnp.swapaxes(qr_, -1, -2)
+    return a_new.astype(st_a.dtype), b_new.astype(st_b.dtype)
+
+
+def dense_rank_r_oracle(st_a, st_b, weights=None, rank: Optional[int] = None):
+    """Parity oracle: materialize the dense weighted-mean update, truncate
+    its SVD to rank r, return the reconstruction.  O(d²) — tests/benchmarks
+    only, NEVER the server path."""
+    n, r = st_a.shape[0], st_a.shape[-1]
+    rank = r if rank is None else rank
+    w = _normalized_weights(n, weights)
+    wr = w.reshape((n,) + (1,) * (st_a.ndim - 1))
+    dense = jnp.einsum("n...dr,n...rf->...df",
+                       st_a.astype(jnp.float32) * wr,
+                       st_b.astype(jnp.float32))
+    u, s, vt = jnp.linalg.svd(dense, full_matrices=False)
+    return (u[..., :, :rank] * s[..., None, :rank]) @ vt[..., :rank, :]
+
+
+def _factor_pairs(flat):
+    """{'…/a': leaf} paths with a '…/b' sibling → [(base, path_a, path_b)]."""
+    pairs = []
+    for p in flat:
+        if p.endswith("/a") and (p[:-2] + "/b") in flat:
+            pairs.append((p[:-2], p, p[:-2] + "/b"))
+    return pairs
+
+
+def factored_fedavg_tree(stacked_tree, weights=None, *, axis_names=None,
+                         rank: Optional[int] = None):
+    """Weighted-mean aggregation of a stacked upload tree where every
+    ``{'a','b'}`` factor pair aggregates as the rank-r SVD re-projection of
+    ``Σ ŵ_i A_i·B_i`` (``svd_reproject``) and every other leaf gets the
+    plain stacked weighted mean.  Drop-in replacement for
+    ``fedavg_stacked`` on factor-bearing trees."""
+    from repro.core.aggregation import fedavg_stacked
+    avg = fedavg_stacked(stacked_tree, weights, axis_names=axis_names)
+    flat = trees.flatten(stacked_tree)
+    repl = {}
+    for _, pa, pb in _factor_pairs(flat):
+        a_new, b_new = svd_reproject(flat[pa], flat[pb], weights, rank,
+                                     axis_names=axis_names)
+        repl[pa], repl[pb] = a_new, b_new
+    if not repl:
+        return avg
+    return trees.map_with_path(lambda p, v: repl.get(p, v), avg)

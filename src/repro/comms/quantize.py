@@ -1,0 +1,87 @@
+"""Stochastic-rounding per-channel quantization (the uplink's lossy core).
+
+One leaf at a time, pure and jittable, so the tree layer (``comms.codec``)
+can vmap the whole encode→decode roundtrip over the cohort engine's stacked
+client axis and run it inside the compiled round step.
+
+Scheme (per leaf):
+
+* **channel axis** — the smaller of the last two dims (for a LoRA factor
+  ``A (…, din, r)`` that is the rank axis; for ``B (…, r, dout)`` it is the
+  rank axis again), so the per-channel scale vector stays tiny relative to
+  the payload.  1-D leaves get a single per-tensor scale.
+* **scale** — absmax of the channel divided by ``qmax = 2^(bits-1) - 1``,
+  itself rounded through bfloat16 (the scale rides the payload at
+  ``SCALE_BITS`` = 16 bits per channel — see ``comms.codec``).
+* **stochastic rounding** — ``q = floor(x/scale + u)``, ``u ~ U[0, 1)``, so
+  ``E[q·scale] = x`` exactly for every in-range element (the clip only
+  guards float round-off at ±qmax).  Unbiasedness is what lets the server's
+  weighted mean of decoded uploads converge like the uncompressed mean.
+
+Bit accounting (``payload_bits``) charges the *empirical entropy* of the
+quantized symbols — the idealized adaptive arithmetic/range coder every
+practical uplink stack (QSGD's Elias coding, DEFLATE framing) approximates
+— never more than ``bits`` per element, typically far less because absmax
+scaling concentrates stochastic-rounded deltas near zero.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax_for(bits: int) -> int:
+    """Largest symmetric integer level: 127 for int8, 7 for int4."""
+    return 2 ** (bits - 1) - 1
+
+
+def channel_scale(x, bits: int):
+    """Per-channel absmax / qmax, rounded through bf16 (the transmitted
+    precision).  Channel = the smaller of the last two dims; 1-D/0-D leaves
+    get one per-tensor scale."""
+    ax = jnp.abs(x.astype(jnp.float32))
+    if x.ndim >= 2:
+        axis = -2 if x.shape[-2] >= x.shape[-1] else -1
+        s = jnp.max(ax, axis=axis, keepdims=True)
+    else:
+        s = jnp.max(ax)
+    s = s / qmax_for(bits)
+    # bias the bf16 rounding UP (1+2⁻⁷ > bf16's 2⁻⁸ ulp): a scale that
+    # rounded down would push the channel's absmax element past qmax into
+    # the clip, breaking stochastic-rounding unbiasedness at the boundary
+    return (s * (1.0 + 2.0 ** -7)).astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def sr_quantize(key, x, bits: int):
+    """Encode: {'q': int8 symbols in [-qmax, qmax], 'scale': bf16-rounded
+    per-channel scales}.  All-zero channels produce scale 0 and q 0."""
+    qm = qmax_for(bits)
+    scale = channel_scale(x, bits)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    y = x.astype(jnp.float32) * inv
+    u = jax.random.uniform(key, x.shape)
+    q = jnp.clip(jnp.floor(y + u), -qm, qm).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def sr_dequantize(enc, dtype=jnp.float32):
+    """Decode: q · scale."""
+    return (enc["q"].astype(jnp.float32) * enc["scale"]).astype(dtype)
+
+
+def symbol_entropy_bits(q, bits: int, weight=None):
+    """Empirical-entropy payload charge for one leaf's symbols: n·H(q) bits,
+    H over the ``2^bits``-ary histogram (idealized adaptive entropy coder —
+    always ≤ n·bits).  ``weight`` (broadcastable 0/1, e.g. PFIT's sparsity
+    mask) restricts the charge to transmitted elements."""
+    nsym = 2 ** bits
+    sym = (q.astype(jnp.int32) + nsym // 2).reshape(-1)
+    if weight is None:
+        w = jnp.ones(sym.shape, jnp.float32)
+    else:
+        w = jnp.broadcast_to(weight, q.shape).reshape(-1).astype(jnp.float32)
+    hist = jnp.zeros((nsym,), jnp.float32).at[sym].add(w)
+    n = hist.sum()
+    p = hist / jnp.maximum(n, 1.0)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
+    return n * ent

@@ -1,0 +1,80 @@
+"""Sketch codecs: top-k sparsification and count-sketch.
+
+Both are pure jittable leaf-level encode/decode pairs (the tree layer in
+``comms.codec`` vmaps them over the stacked client axis).  Shapes are
+static — ``k`` and the bucket count are computed from the leaf's static
+size at trace time — so the encoded payload composes with ``shard_map``
+and the ghost-padded cohorts of the sharded engine.
+
+* **top-k** — transmit the k largest-|value| entries as (f16 value, int32
+  index) pairs; decode scatters them back into zeros.  Deterministic (no
+  PRNG).  This is the launcher-facing ``sketch`` codec.
+* **count-sketch** — project the flattened leaf into ``rows`` hash rows of
+  ``buckets`` signed buckets; decode reads ``sign·bucket[h(j)]`` and takes
+  the median over rows.  The hash/sign streams are derived from a FIXED
+  per-leaf key (``leaf_seed``), so server and every client share them with
+  zero negotiation traffic.  Recovery is only faithful for heavy-hitter
+  (top-k-dominated) signals — exactly the regime sparsified FL updates live
+  in; see ``tests/test_comms.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_k(size: int, frac: float) -> int:
+    return max(1, min(size, int(round(size * frac))))
+
+
+def topk_encode(x, frac: float):
+    """{'idx': int32 (k,), 'val': f16-rounded f32 (k,), 'shape': aux} for
+    the k largest-magnitude entries of the flattened leaf."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    k = topk_k(flat.shape[0], frac)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    val = flat[idx].astype(jnp.float16).astype(jnp.float32)
+    return {"idx": idx.astype(jnp.int32), "val": val}
+
+
+def topk_decode(enc, shape, dtype=jnp.float32):
+    size = 1
+    for s in shape:
+        size *= s
+    out = jnp.zeros((size,), jnp.float32).at[enc["idx"]].set(enc["val"])
+    return out.reshape(shape).astype(dtype)
+
+
+def _cs_hashes(leaf_seed: int, size: int, rows: int, buckets: int):
+    """Static per-leaf hash/sign streams — identical on server and every
+    client (derived from the leaf's position in the tree, not from data)."""
+    hk = jax.random.PRNGKey(0x5EED ^ leaf_seed)
+    h = jax.random.randint(hk, (rows, size), 0, buckets)
+    sgn = jax.random.rademacher(jax.random.fold_in(hk, 1), (rows, size),
+                                dtype=jnp.float32)
+    return h, sgn
+
+
+def count_sketch_encode(x, *, leaf_seed: int, rows: int, ratio: float):
+    """Project the flattened leaf into (rows, buckets) signed buckets;
+    ``buckets = ceil(size·ratio / rows)`` so the total sketch is ~ratio of
+    the leaf."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    size = flat.shape[0]
+    buckets = max(1, -(-int(round(size * ratio)) // rows))
+    h, sgn = _cs_hashes(leaf_seed, size, rows, buckets)
+    table = jnp.zeros((rows, buckets), jnp.float32)
+    for r in range(rows):
+        table = table.at[r, h[r]].add(sgn[r] * flat)
+    return {"table": table}
+
+
+def count_sketch_decode(enc, shape, *, leaf_seed: int, dtype=jnp.float32):
+    table = enc["table"]
+    rows, buckets = table.shape
+    size = 1
+    for s in shape:
+        size *= s
+    h, sgn = _cs_hashes(leaf_seed, size, rows, buckets)
+    est = jnp.stack([sgn[r] * table[r, h[r]] for r in range(rows)])
+    return jnp.median(est, axis=0).reshape(shape).astype(dtype)

@@ -140,6 +140,20 @@ def masked_fedavg_stacked(global_tree, stacked_tree, stacked_masks,
                                   stacked_masks)
 
 
+def factored_fedavg_stacked(stacked_tree, weights=None, *, axis_names=None,
+                            rank=None):
+    """LoRA-factor-aware weighted mean: every ``{'a','b'}`` sibling pair in
+    the stacked upload tree aggregates as the rank-r SVD re-projection of
+    ``Σ ŵ_i A_i·B_i`` (``repro.comms.factored_agg`` — avg(A·B) ≠
+    avg(A)·avg(B), and the dense mean update is never materialized); every
+    other leaf gets the plain ``fedavg_stacked`` weighted mean.  Same
+    ``axis_names`` contract as the other stacked operators (factor slices
+    are all-gathered over the client mesh axes — they are rank-r tiny)."""
+    from repro.comms.factored_agg import factored_fedavg_tree
+    return factored_fedavg_tree(stacked_tree, weights, axis_names=axis_names,
+                                rank=rank)
+
+
 def broadcast_merge_stacked(stacked_tree, global_tree, stacked_masks=None,
                             gate=None):
     """Fused broadcast-back: each client resumes from the global value on its

@@ -16,6 +16,10 @@ uplinks.
    ``dequantize_update`` — int8 symmetric per-leaf quantization of uploads
    (4× fewer bytes at f32 training dtypes), with the dequantization error
    small enough that FedAvg convergence is preserved (tests assert both).
+   This is the host-side (numpy) legacy path; the jittable codec subsystem
+   ``repro.comms`` (stochastic rounding, per-channel scales, entropy bit
+   accounting, sketches, SVD factored aggregation) is what the fused cohort
+   round runs INSIDE the compiled step — prefer it for new code.
 """
 from __future__ import annotations
 

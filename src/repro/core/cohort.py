@@ -23,6 +23,13 @@ Two round builders cover the repo's workloads:
   generation, double-reward scoring, PPO updates under per-client gradient
   masks, masked aggregation against the global model, masked broadcast.
 
+Both builders take ``codec=`` (``repro.comms``): the per-client upload is
+lossily encoded→decoded (vmapped ``comms.codec.roundtrip``, delta against
+the round-input reference) INSIDE the fused step, the server aggregates the
+decode, and the step returns the per-client encoded payload bits the round
+loop feeds to ``comms.ChannelBudget`` — compression never leaves the
+compiled program either.
+
 Outages never leave the compiled program: the wireless layer contributes a
 per-client weight *vector* (``RayleighChannel.outage_weights``), zero
 entries drop a client from the weighted mean, and an all-zero vector gates
@@ -53,7 +60,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import trees
-from repro.core.aggregation import (broadcast_merge_stacked, fedavg_stacked,
+from repro.comms import codec as codec_mod
+from repro.core.aggregation import (broadcast_merge_stacked,
+                                    factored_fedavg_stacked, fedavg_stacked,
                                     masked_fedavg_stacked)
 from repro.rlhf.ppo import PPOConfig, make_ppo_fns
 from repro.rlhf.rollout import generate
@@ -132,7 +141,8 @@ def build_cohort_eval(eval_fn: Callable,
 def build_supervised_round(local_step_fn: Callable,
                            upload_pred: Optional[Callable[[str], bool]] = None,
                            *, donate: bool = True, mesh=None,
-                           client_axes=None):
+                           client_axes=None, codec=None,
+                           factored_agg: bool = False):
     """Fuse per-client local SGD + FedAvg + broadcast into one jitted step.
 
     ``local_step_fn(trainable, opt_state, batch) -> (trainable, opt_state,
@@ -145,6 +155,18 @@ def build_supervised_round(local_step_fn: Callable,
     ``weights`` is the (n_clients,) outage vector.  Produces the updated
     stacked state and the (n_clients, local_steps) loss matrix.
 
+    ``codec`` (a ``repro.comms`` codec): the uploaded subtree is lossily
+    encoded→decoded per client INSIDE the fused step (vmapped
+    ``comms.codec.roundtrip`` against the round-input reference) before
+    aggregation, and the step takes one extra ``keys`` arg ((n, 2) uint32,
+    the per-client PRNG keys for stochastic rounding) and returns one extra
+    ``payload_bits`` (n,) output — the encoded uplink charge per client.
+
+    ``factored_agg``: aggregate ``{'a','b'}`` LoRA factor pairs as the SVD
+    re-projection of the weighted-mean update instead of averaging the
+    factors elementwise (``aggregation.factored_fedavg_stacked`` — the
+    server never densifies).
+
     ``mesh`` (+ optional ``client_axes``, default every non-"model" axis):
     wrap the round in ``shard_map`` with the client axis sharded over the
     mesh — each shard trains its local client slice, aggregation is a psum
@@ -155,8 +177,14 @@ def build_supervised_round(local_step_fn: Callable,
     """
     pred = upload_pred or (lambda p: True)
     axes = None if mesh is None else client_shard_axes(mesh, client_axes)
+    agg_fn = factored_fedavg_stacked if factored_agg else fedavg_stacked
 
-    def round_body(st_trainable, st_opt, batches, weights):
+    def round_body(st_trainable, st_opt, batches, weights, keys=None):
+        # server-known reference for delta coding: the round-input value of
+        # the uploaded subtree (the previous broadcast global on every
+        # non-all-outage round)
+        ref = trees.select(st_trainable, pred) if codec is not None else None
+
         def client(tr, op, client_batches):
             def step(carry, batch):
                 tr, op = carry
@@ -171,9 +199,15 @@ def build_supervised_round(local_step_fn: Callable,
 
         # server: weighted mean of the uploaded subtree over surviving
         # clients (a psum over the mesh when sharded), broadcast back into
-        # every client's stacked slot
-        agg = fedavg_stacked(trees.select(st_trainable, pred), weights,
-                             axis_names=axes)
+        # every client's stacked slot.  With a codec, the server only ever
+        # sees the lossy decode of each client's upload.
+        uploaded = trees.select(st_trainable, pred)
+        bits = None
+        if codec is not None:
+            uploaded, bits = jax.vmap(
+                lambda k, t, rf: codec_mod.roundtrip(codec, k, t, ref=rf)
+            )(keys, uploaded, ref)
+        agg = agg_fn(uploaded, weights, axis_names=axes)
         flat_agg = trees.flatten(agg)
         wsum = weights.sum()
         if axes is not None:
@@ -188,15 +222,21 @@ def build_supervised_round(local_step_fn: Callable,
             return jnp.where(gate, bc, loc)
 
         st_trainable = trees.map_with_path(put, st_trainable)
+        if codec is not None:
+            return st_trainable, st_opt, losses, bits
         return st_trainable, st_opt, losses
 
     if mesh is None:
         round_step = round_body
     else:
+        # the codec variant carries one extra stacked input (PRNG keys) and
+        # one extra stacked output (payload bits); shard_map calls
+        # round_body positionally so the same body serves both arities
         pc = P(axes)
+        n_in, n_out = (5, 4) if codec is not None else (4, 3)
         round_step = shard_map(round_body, mesh=mesh,
-                               in_specs=(pc, pc, pc, pc),
-                               out_specs=(pc, pc, pc), check_vma=False)
+                               in_specs=(pc,) * n_in,
+                               out_specs=(pc,) * n_out, check_vma=False)
     return jax.jit(round_step, donate_argnums=(0, 1) if donate else ())
 
 
@@ -204,7 +244,8 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
                     gen_len: int, quality_fn: Callable, *,
                     lambda_regs=None,
                     reg_pred: Optional[Callable[[str], bool]] = None,
-                    donate: bool = True, mesh=None, client_axes=None):
+                    donate: bool = True, mesh=None, client_axes=None,
+                    codec=None):
     """Fuse PFIT's per-client PPO round + masked aggregation + masked
     broadcast into one jitted step.
 
@@ -220,6 +261,13 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
     ``(st_params, st_opt, new_global, mean_rewards, mean_kls)`` with all
     per-client inputs stacked on a leading client axis.
 
+    ``codec`` (a ``repro.comms`` codec): each client's post-PPO params are
+    lossily encoded→decoded (delta against the round-input params, bit
+    charge restricted to the client's sparsity-mask entries — unmasked
+    parameters are never uploaded) before the masked aggregation, the step
+    takes an extra trailing ``keys`` arg ((n, 2) uint32) and returns an
+    extra ``payload_bits`` (n,) output.
+
     ``mesh`` (+ optional ``client_axes``): as in ``build_supervised_round``
     — the whole PPO round runs under ``shard_map`` with per-client state
     sharded over the mesh, the global model replicated (``P()`` in and
@@ -234,7 +282,10 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
     axes = None if mesh is None else client_shard_axes(mesh, client_axes)
 
     def round_body(st_params, st_opt, global_params, st_masks, prompts, keys,
-                   alphas_help, alphas_safe, weights, st_lams):
+                   alphas_help, alphas_safe, weights, st_lams,
+                   codec_keys=None):
+        ref = st_params if codec is not None else None   # round-input params
+
         def client(params, opt_state, grad_mask, client_prompts, key,
                    a_help, a_safe, lam):
             toks = generate(model, params, client_prompts, gen_len, key,
@@ -261,32 +312,48 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
 
         # server: sparse-mask-weighted aggregation over surviving clients
         # (all-outage → den 0 everywhere → global kept), then each client
-        # resumes from the new global on its own masked entries
-        new_global = masked_fedavg_stacked(global_params, st_params, st_masks,
+        # resumes from the new global on its own masked entries.  With a
+        # codec the server aggregates the lossy decode of each client's
+        # masked delta upload instead of the exact params.
+        uploaded, bits = st_params, None
+        if codec is not None:
+            uploaded, bits = jax.vmap(
+                lambda k, t, rf, m: codec_mod.roundtrip(
+                    codec, k, t, ref=rf, bit_weights=m)
+            )(codec_keys, st_params, ref, st_masks)
+        new_global = masked_fedavg_stacked(global_params, uploaded, st_masks,
                                            weights, axis_names=axes)
         wsum = weights.sum()
         if axes is not None:
             wsum = jax.lax.psum(wsum, axes)
         st_params = broadcast_merge_stacked(st_params, new_global, st_masks,
                                             gate=wsum > 0)
+        if codec is not None:
+            return st_params, st_opt, new_global, mean_rewards, mean_kls, bits
         return st_params, st_opt, new_global, mean_rewards, mean_kls
 
     if mesh is None:
         body = round_body
     else:
         pc, pr = P(axes), P()
+        n_extra = 1 if codec is not None else 0
         body = shard_map(round_body, mesh=mesh,
-                         in_specs=(pc, pc, pr, pc, pc, pc, pc, pc, pc, pc),
-                         out_specs=(pc, pc, pr, pc, pc), check_vma=False)
+                         in_specs=(pc, pc, pr, pc, pc, pc, pc, pc, pc, pc)
+                         + (pc,) * n_extra,
+                         out_specs=(pc, pc, pr, pc, pc) + (pc,) * n_extra,
+                         check_vma=False)
 
     def round_step(st_params, st_opt, global_params, st_masks, prompts, keys,
-                   alphas_help, alphas_safe, weights):
+                   alphas_help, alphas_safe, weights, codec_keys=None):
         # per-client λ rides in as a stacked arg so the shard_map slices it
         # with the rest of the client axis (a closed-over vector would stay
         # whole-cohort-sized and break the local vmap)
         st_lams = (jnp.asarray(lams) if use_reg
                    else jnp.zeros_like(alphas_help))
-        return body(st_params, st_opt, global_params, st_masks, prompts,
-                    keys, alphas_help, alphas_safe, weights, st_lams)
+        args = (st_params, st_opt, global_params, st_masks, prompts, keys,
+                alphas_help, alphas_safe, weights, st_lams)
+        if codec is not None:
+            args = args + (codec_keys,)
+        return body(*args)
 
     return jax.jit(round_step, donate_argnums=(0, 1) if donate else ())

@@ -42,8 +42,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import trees
+from repro.comms import ChannelBudget, get_codec
+from repro.comms import codec as codec_mod
 from repro.configs import get_config
-from repro.core.aggregation import fedavg, masked_fedavg
+from repro.core.aggregation import (factored_fedavg_stacked, fedavg,
+                                    masked_fedavg)
 from repro.core.cohort import (HostBatchStacker, build_ppo_round,
                                build_supervised_round)
 from repro.core.rewards import ClientPreference, DoubleReward
@@ -86,6 +89,10 @@ class PFITConfig:
     engine: bool = True            # fused vmapped round step (cohort engine)
     factored: bool = True          # unmerged LoRA execution for shepherd
                                    # train/serve (False → merged oracle)
+    uplink_codec: str = "none"     # lossy upload compression (repro.comms)
+    factored_agg: bool = False     # shepherd: SVD re-projection aggregation
+                                   # of LoRA factor pairs (no densification)
+    tx_power_w: float = 0.5        # uplink transmit power (energy charge)
     ppo: PPOConfig = PPOConfig()
 
 
@@ -216,8 +223,18 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
     shepherd_step = jax.jit(shepherd_local_step)
 
     channel = RayleighChannel(mean_snr_db=cfg.snr_db, seed=cfg.seed)
+    budget = ChannelBudget(channel, tx_power_w=cfg.tx_power_w)
     ledger = CommLedger()
     reward_curve = []
+    codec = get_codec(cfg.uplink_codec)
+    codec_key = jax.random.fold_in(key, 0x0C0DEC)
+    # legacy-loop codec roundtrip (the engine vmaps the same function inside
+    # the fused step, so ledger totals agree engine-vs-loop)
+    rt_jit = None if codec is None else jax.jit(
+        lambda k, t, rf, m: codec_mod.roundtrip(codec, k, t, ref=rf,
+                                                bit_weights=m))
+    rt_lora_jit = None if codec is None else jax.jit(
+        lambda k, t, rf: codec_mod.roundtrip(codec, k, t, ref=rf))
 
     # ---- hot paths: personalized double-reward quality + PPO phases
     def quality_fn(toks, mask, ah, asafe):
@@ -274,6 +291,8 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
             if cs is not None else (lambda x: x)
         if cfg.method == "shepherd":
             round_step = build_supervised_round(shepherd_local_step,
+                                                codec=codec,
+                                                factored_agg=cfg.factored_agg,
                                                 **mesh_kw)
             cohort_tr = _shard(trees.stack(pad([cl["lora"]
                                                 for cl in clients])))
@@ -285,7 +304,8 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
         else:
             ppo_round_step = build_ppo_round(
                 model, opt, cfg.ppo, cfg.prompt_len, cfg.gen_len, quality_fn,
-                lambda_regs=pad([p.lambda_reg for p in prefs]), **mesh_kw)
+                lambda_regs=pad([p.lambda_reg for p in prefs]), codec=codec,
+                **mesh_kw)
             cohort_tr = _shard(trees.stack(pad([cl["params"]
                                                 for cl in clients])))
             cohort_opt = _shard(trees.stack(pad([cl["opt_state"]
@@ -301,13 +321,18 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
 
     for rnd in range(cfg.rounds):
         gains = channel.realize(cfg.n_clients)
+        rnd_key = jax.random.fold_in(codec_key, rnd)
         reports = []
         if use_engine:
-            reports = [channel.uplink(payloads[ci], gain=gains[ci])
-                       for ci in range(cfg.n_clients)]
             w = channel.outage_weights(gains)
             weights = jax.device_put(cs.pad_weights(w), cs.named) \
                 if cs is not None else jnp.asarray(w)
+            ck = None
+            if codec is not None:
+                ck = jnp.stack(pad([jax.random.fold_in(rnd_key, ci)
+                                    for ci in range(cfg.n_clients)]))
+                if cs is not None:
+                    ck = jax.device_put(ck, cs.named)
             if cfg.method == "shepherd":
                 def shepherd_batch(ci):
                     s = corpus.sample(cfg.rollout_batch,
@@ -319,8 +344,15 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 batches = stacker(pad(
                     [[shepherd_batch(ci) for _ in range(cfg.shepherd_steps)]
                      for ci in range(cfg.n_clients)]))
-                cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
-                                                      batches, weights)
+                if codec is None:
+                    cohort_tr, cohort_opt, _ = round_step(
+                        cohort_tr, cohort_opt, batches, weights)
+                    bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
+                else:
+                    cohort_tr, cohort_opt, _, eng_bits = round_step(
+                        cohort_tr, cohort_opt, batches, weights, ck)
+                    bits = [float(b)
+                            for b in np.asarray(eng_bits)[:cfg.n_clients]]
                 for cl, lo in zip(clients,
                                   trees.unstack(cohort_tr, cfg.n_clients)):
                     cl["lora"] = lo
@@ -333,18 +365,29 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 keys = _shard(jnp.stack(pad(
                     [jax.random.fold_in(key, rnd * 17 + ci)
                      for ci in range(cfg.n_clients)])))
-                (cohort_tr, cohort_opt, global_params, _,
-                 _) = ppo_round_step(cohort_tr, cohort_opt, global_params,
-                                     st_masks, prompts, keys, alphas_h,
-                                     alphas_s, weights)
+                if codec is None:
+                    (cohort_tr, cohort_opt, global_params, _,
+                     _) = ppo_round_step(cohort_tr, cohort_opt, global_params,
+                                         st_masks, prompts, keys, alphas_h,
+                                         alphas_s, weights)
+                    bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
+                else:
+                    (cohort_tr, cohort_opt, global_params, _, _,
+                     eng_bits) = ppo_round_step(
+                        cohort_tr, cohort_opt, global_params, st_masks,
+                        prompts, keys, alphas_h, alphas_s, weights, ck)
+                    bits = [float(b)
+                            for b in np.asarray(eng_bits)[:cfg.n_clients]]
                 for cl, p in zip(clients,
                                  trees.unstack(cohort_tr, cfg.n_clients)):
                     cl["params"] = p
+            reports = budget.round_reports(bits, gains)
             ledger.log_round(reports)
             # (aggregation + broadcast already fused into the round step)
         else:
             for ci, cl in enumerate(clients):
                 if cfg.method == "shepherd":
+                    ref = cl["lora"] if codec is not None else None
                     for _ in range(cfg.shepherd_steps):
                         s = corpus.sample(cfg.rollout_batch,
                                           topic_probs=topic_prefs[ci],
@@ -356,11 +399,18 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                                  "mask": jnp.asarray(s["mask"][:, 1:])}
                         cl["lora"], cl["opt_state"], _ = shepherd_step(
                             cl["lora"], cl["opt_state"], batch)
-                    reports.append(channel.uplink(tree_bytes(cl["lora"]),
-                                                  gain=gains[ci]))
+                    if codec is None:
+                        bits_ci = tree_bytes(cl["lora"]) * 8
+                    else:
+                        dec, b = rt_lora_jit(
+                            jax.random.fold_in(rnd_key, ci), cl["lora"], ref)
+                        cl["decoded_upload"] = dec
+                        bits_ci = float(b)
+                    reports.append(budget.report(bits_ci, gains[ci]))
                     continue
 
                 # --- PPO with the personalized reward
+                ref = cl["params"] if codec is not None else None
                 s = corpus.sample(cfg.rollout_batch,
                                   topic_probs=topic_prefs[ci], rng=rng)
                 prompts = jnp.asarray(s["tokens"][:, :cfg.prompt_len])
@@ -382,22 +432,36 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 cl["params"], cl["opt_state"], _ = ppo_trainer.round(
                     cl["params"], global_params, cl["opt_state"],
                     toks, reward, grad_mask=client_masks[ci])
-                reports.append(channel.uplink(
-                    tree_bytes(cl["params"], nonzero_mask=client_masks[ci]),
-                    gain=gains[ci]))
+                if codec is None:
+                    bits_ci = tree_bytes(cl["params"],
+                                         nonzero_mask=client_masks[ci]) * 8
+                else:
+                    dec, b = rt_jit(jax.random.fold_in(rnd_key, ci),
+                                    cl["params"], ref, client_masks[ci])
+                    cl["decoded_upload"] = dec
+                    bits_ci = float(b)
+                reports.append(budget.report(bits_ci, gains[ci]))
             ledger.log_round(reports)
 
-            # --- aggregation
+            # --- aggregation (over the lossy decoded uploads with a codec)
             alive = [ci for ci, r in enumerate(reports) if not r.outage]
             if alive:
+                def upload(ci, kind):
+                    if codec is not None:
+                        return clients[ci]["decoded_upload"]
+                    return clients[ci][kind]
                 if cfg.method == "shepherd":
-                    agg = fedavg([clients[ci]["lora"] for ci in alive])
+                    ups = [upload(ci, "lora") for ci in alive]
+                    if cfg.factored_agg:
+                        agg = factored_fedavg_stacked(trees.stack(ups))
+                    else:
+                        agg = fedavg(ups)
                     for cl in clients:
                         cl["lora"] = agg
                 else:
                     global_params = masked_fedavg(
                         global_params,
-                        [clients[ci]["params"] for ci in alive],
+                        [upload(ci, "params") for ci in alive],
                         [client_masks[ci] for ci in alive])
                     # broadcast: clients resume from global on masked entries
                     for ci, cl in enumerate(clients):
@@ -429,6 +493,8 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
         "mean_round_bytes": ledger.mean_round_bytes,
         "mean_round_delay_s": ledger.mean_round_delay,
         "total_bytes": ledger.total_bytes,
+        "total_energy_j": ledger.total_energy_j,
+        "uplink_codec": cfg.uplink_codec,
         "rm_pair_acc": {"help": rmh_stats["pair_acc"],
                         "safe": rms_stats["pair_acc"]},
     }

@@ -28,6 +28,16 @@ the merged oracle.  Per-round eval pads every client's test set to one
 validity-masked shape and scores the stacked cohort in ONE jitted vmapped
 dispatch (``core/cohort.py::build_cohort_eval``).
 
+``PFTTConfig(uplink_codec=...)`` compresses every upload INSIDE the fused
+round step (``repro.comms``: stochastic-rounding int8/int4 quantization or
+top-k/count-sketch sketching of the delta against the last broadcast
+global); the server aggregates the lossy decode and the ledger charges the
+encoded payload bits through ``ChannelBudget`` (bits → Rayleigh delay +
+transmit energy) instead of the raw ``tree_bytes``.
+``PFTTConfig(factored_agg=True)`` aggregates LoRA ``{'a','b'}`` pairs as
+the SVD re-projection of the weighted-mean update (never densified) —
+see ``repro.comms.factored_agg``.
+
 ``run_pftt(cfg, mesh=...)`` shards the fused round across the device mesh:
 the stacked client axis is split over the mesh's non-"model" axes via
 ``shard_map`` (aggregation → psum of weighted partial sums), cohort state
@@ -48,7 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import trees
-from repro.core.aggregation import fedavg
+from repro.comms import ChannelBudget, get_codec
+from repro.comms import codec as codec_mod
+from repro.core.aggregation import factored_fedavg_stacked, fedavg
 from repro.core.cohort import (HostBatchStacker, build_cohort_eval,
                                build_supervised_round)
 from repro.configs import get_config
@@ -87,6 +99,12 @@ class PFTTConfig:
     engine: bool = True            # fused vmapped round step (cohort engine)
     factored: bool = True          # unmerged LoRA execution (False → merged
                                    # parity oracle: materialize W + sAB)
+    uplink_codec: str = "none"     # none|int8|int4|sketch|countsketch —
+                                   # lossy upload compression (repro.comms)
+    factored_agg: bool = False     # aggregate LoRA {'a','b'} pairs via SVD
+                                   # re-projection (never densified)
+    tx_power_w: float = 0.5        # uplink transmit power for the energy
+                                   # charge (ChannelBudget)
 
 
 def _upload_pred(method: str):
@@ -293,23 +311,35 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         return [float(c / n) for c, n in zip(corr, cnt) if n > 0]
 
     channel = RayleighChannel(mean_snr_db=cfg.snr_db, seed=cfg.seed)
+    budget = ChannelBudget(channel, tx_power_w=cfg.tx_power_w)
     ledger = CommLedger()
     upload_pred = _upload_pred(cfg.method)
     accs_per_round = []
+    codec = get_codec(cfg.uplink_codec)
+    codec_key = jax.random.fold_in(key, 0x0C0DEC)
+    # legacy-loop codec roundtrip (per client; the engine vmaps the same
+    # function inside the fused step, so ledgers agree engine-vs-loop)
+    rt_jit = None if codec is None else jax.jit(
+        lambda k, t, rf: codec_mod.roundtrip(codec, k, t, ref=rf))
+
+    def act_bits() -> float:
+        """fedbert split learning: per-step activation exchange dominates —
+        uncompressed either way (the codec covers parameter uploads)."""
+        if cfg.method != "fedbert":
+            return 0.0
+        return cfg.local_steps * cfg.batch * cfg.seq_len * cfg.d_model \
+            * 4 * 2 * 8
 
     def payload_bytes(trainable) -> int:
         shared = trees.select(trainable, upload_pred)
-        if cfg.method == "fedbert":
-            # split learning: per-step activation exchange dominates
-            act = cfg.local_steps * cfg.batch * cfg.seq_len * cfg.d_model * 4 * 2
-            return tree_bytes(shared) + act
-        return tree_bytes(shared)
+        return tree_bytes(shared) + act_bits() / 8
 
     if use_engine:
         round_step = build_supervised_round(
             local_step, upload_pred,
             mesh=cs.mesh if cs is not None else None,
-            client_axes=cs.axes if cs is not None else None)
+            client_axes=cs.axes if cs is not None else None,
+            codec=codec, factored_agg=cfg.factored_agg)
         pad = cs.pad if cs is not None else (lambda xs: xs)
         cohort_tr = trees.stack(pad([cl["trainable"] for cl in clients]))
         cohort_opt = trees.stack(pad([cl["opt_state"] for cl in clients]))
@@ -322,6 +352,7 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
 
     for rnd in range(cfg.rounds):
         gains = channel.realize(cfg.n_clients)
+        rnd_key = jax.random.fold_in(codec_key, rnd)
         reports = []
         if use_engine:
             # host side: draw the round's batches in the legacy (client,
@@ -332,31 +363,57 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
             batches = stacker(pad(
                 [[next(client_iters[ci]) for _ in range(cfg.local_steps)]
                  for ci in range(cfg.n_clients)]))
-            reports = [channel.uplink(payloads[ci], gain=gains[ci])
-                       for ci in range(cfg.n_clients)]
             w = channel.outage_weights(gains)
             weights = jax.device_put(cs.pad_weights(w), cs.named) \
                 if cs is not None else jnp.asarray(w)
-            cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
-                                                  batches, weights)
+            if codec is None:
+                cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
+                                                      batches, weights)
+                bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
+            else:
+                ck = jnp.stack(pad(
+                    [jax.random.fold_in(rnd_key, ci)
+                     for ci in range(cfg.n_clients)]))
+                if cs is not None:
+                    ck = jax.device_put(ck, cs.named)
+                cohort_tr, cohort_opt, _, eng_bits = round_step(
+                    cohort_tr, cohort_opt, batches, weights, ck)
+                bits = [float(b) + act_bits()
+                        for b in np.asarray(eng_bits)[:cfg.n_clients]]
+            reports = budget.round_reports(bits, gains)
         else:
             for ci, cl in enumerate(clients):
+                ref = (trees.select(cl["trainable"], upload_pred)
+                       if codec is not None else None)
                 for _ in range(cfg.local_steps):
                     batch = {k: jnp.asarray(v) for k, v in
                              next(client_iters[ci]).items()}
                     cl["trainable"], cl["opt_state"], loss = local_step_jit(
                         cl["trainable"], cl["opt_state"], batch)
-                reports.append(channel.uplink(payload_bytes(cl["trainable"]),
-                                              gain=gains[ci]))
+                if codec is None:
+                    bits_ci = payload_bytes(cl["trainable"]) * 8
+                else:
+                    dec, b = rt_jit(jax.random.fold_in(rnd_key, ci),
+                                    trees.select(cl["trainable"],
+                                                 upload_pred), ref)
+                    cl["decoded_upload"] = dec
+                    bits_ci = float(b) + act_bits()
+                reports.append(budget.report(bits_ci, gains[ci]))
         ledger.log_round(reports)
 
         # --- aggregation over surviving clients (partial for pftt); in the
-        # engine path this already happened inside the fused round step
+        # engine path this already happened inside the fused round step.
+        # With a codec the server aggregates the lossy decoded uploads.
         alive = [ci for ci, r in enumerate(reports) if not r.outage]
         if alive and not use_engine:
-            shared_trees = [trees.select(clients[ci]["trainable"], upload_pred)
-                            for ci in alive]
-            agg = fedavg(shared_trees)
+            shared_trees = [
+                clients[ci]["decoded_upload"] if codec is not None
+                else trees.select(clients[ci]["trainable"], upload_pred)
+                for ci in alive]
+            if cfg.factored_agg:
+                agg = factored_fedavg_stacked(trees.stack(shared_trees))
+            else:
+                agg = fedavg(shared_trees)
             for cl in clients:
                 cl["trainable"] = trees.merge(cl["trainable"], agg)
 
@@ -380,5 +437,7 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         "mean_round_bytes": ledger.mean_round_bytes,
         "mean_round_delay_s": ledger.mean_round_delay,
         "total_bytes": ledger.total_bytes,
+        "total_energy_j": ledger.total_energy_j,
+        "uplink_codec": cfg.uplink_codec,
         "eval_dispatches_per_round": eval_dispatches[0] / max(cfg.rounds, 1),
     }

@@ -42,6 +42,15 @@ def main():
                     help="run a federated PFTT cohort of this size with the "
                          "client axis sharded over all devices (0 → off)")
     ap.add_argument("--fl-rounds", type=int, default=3)
+    ap.add_argument("--uplink-codec", default="none",
+                    choices=["none", "int8", "int4", "sketch"],
+                    help="compress FL uploads inside the fused round step "
+                         "(repro.comms): stochastic-rounding int8/int4 "
+                         "quantization or top-k sketching of the delta "
+                         "against the last broadcast global")
+    ap.add_argument("--factored-agg", action="store_true",
+                    help="aggregate LoRA factor pairs via SVD re-projection "
+                         "of the weighted-mean update (never densified)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -54,11 +63,16 @@ def main():
         cfg = PFTTConfig(n_clients=args.fl_clients, rounds=args.fl_rounds,
                          batch=args.batch, lr=args.lr, local_steps=5,
                          pretrain_steps=50, samples_per_client=200,
+                         uplink_codec=args.uplink_codec,
+                         factored_agg=args.factored_agg,
                          verbose=True)
         res = run_pftt(cfg, mesh=mesh, client_axes=("data",))
         print(f"sharded cohort over {n_dev} device(s): final acc "
               f"{res['final_acc']:.3f} mean round bytes "
-              f"{res['mean_round_bytes']:,.0f}")
+              f"{res['mean_round_bytes']:,.0f} "
+              f"(codec={args.uplink_codec}) mean round delay "
+              f"{res['mean_round_delay_s']:.3f}s energy "
+              f"{res['total_energy_j']:.2f}J")
         return
     d = args.data_axis or n_dev
     mesh = jax.make_mesh((d, n_dev // d), ("data", "model"))

@@ -21,7 +21,8 @@ class ChannelReport:
     rate_bps: float
     delay_s: float
     outage: bool
-    bytes_sent: int
+    bytes_sent: float
+    energy_j: float = 0.0     # transmit energy; filled by comms.ChannelBudget
 
 
 @dataclasses.dataclass
@@ -54,8 +55,10 @@ class RayleighChannel:
         snr_db, _ = self.snr(gains)
         return (snr_db >= self.outage_snr_db).astype(np.float32)
 
-    def uplink(self, payload_bytes: int, gain: Optional[float] = None
+    def uplink(self, payload_bytes: float, gain: Optional[float] = None
                ) -> ChannelReport:
+        """``payload_bytes`` may be fractional (entropy-coded payloads —
+        see ``repro.comms``); delay charges the exact bit count."""
         if gain is None:
             gain = float(self._rng.exponential(1.0))
         snr_db, snr_lin = self.snr(gain)

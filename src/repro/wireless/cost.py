@@ -8,44 +8,75 @@ import jax
 import numpy as np
 
 
-def tree_bytes(tree, *, nonzero_mask=None) -> int:
-    """Bytes of a pytree payload.  With ``nonzero_mask`` (same structure of
-    1/0 float masks), masked-out parameters are not transmitted (the paper's
-    sparse-attention upload saving)."""
-    total = 0
-    leaves = jax.tree_util.tree_leaves(tree)
-    if nonzero_mask is None:
-        for x in leaves:
-            if hasattr(x, "size"):
-                total += int(x.size) * x.dtype.itemsize
-        return total
-    masks = jax.tree_util.tree_leaves(nonzero_mask)
-    for x, m in zip(leaves, masks):
+def tree_bytes(tree, *, nonzero_mask=None, itemsize=None) -> float:
+    """Bytes of a pytree payload.
+
+    ``nonzero_mask`` (same *structure* of 1/0 float masks, broadcastable per
+    leaf): masked-out parameters are not transmitted (the paper's
+    sparse-attention upload saving).  Masks are paired with leaves by
+    treedef (``tree_map``), so a structure mismatch raises instead of
+    silently misaligning.
+
+    ``itemsize`` overrides the per-element byte width (quantized leaves are
+    not ``x.dtype.itemsize`` bytes): a number applies to every leaf, or a
+    same-structure pytree gives a per-leaf override (``None``/missing
+    entries fall back to the leaf dtype)."""
+    from repro import trees as _trees
+
+    flat = _trees.flatten(tree)
+    masks = {}
+    if nonzero_mask is not None:
+        if (jax.tree_util.tree_structure(nonzero_mask)
+                != jax.tree_util.tree_structure(tree)):
+            raise ValueError(
+                "tree_bytes: nonzero_mask structure does not match tree — "
+                f"{jax.tree_util.tree_structure(nonzero_mask)} vs "
+                f"{jax.tree_util.tree_structure(tree)}")
+        masks = _trees.flatten(nonzero_mask)
+    if itemsize is None:
+        override = {}
+    elif isinstance(itemsize, (int, float)):
+        override = {p: float(itemsize) for p in flat}
+    else:
+        override = {p: float(v) for p, v in _trees.flatten(itemsize).items()
+                    if v is not None}
+
+    total = 0.0
+    for p, x in flat.items():
         if not hasattr(x, "size"):
             continue
-        m = np.asarray(m)
-        frac = float(m.mean()) if m.size else 1.0
-        total += int(round(x.size * frac)) * x.dtype.itemsize
-    return total
+        frac = 1.0
+        if p in masks:
+            m = np.asarray(masks[p])
+            frac = float(m.mean()) if m.size else 1.0
+        total += round(x.size * frac) * override.get(p, x.dtype.itemsize)
+    return int(total) if float(total).is_integer() else total
 
 
 @dataclasses.dataclass
 class CommLedger:
-    """Per-round, per-client record of upload traffic and delay."""
+    """Per-round, per-client record of upload traffic, delay and energy."""
     rounds: List[Dict] = dataclasses.field(default_factory=list)
 
     def log_round(self, reports):
+        # an all-outage round has no completed upload: its delay is
+        # undefined (NaN), not 0.0 — mean_round_delay skips it
+        alive = [r.delay_s for r in reports if not r.outage]
         self.rounds.append({
             "bytes": sum(r.bytes_sent for r in reports),
-            "delay_s": max((r.delay_s for r in reports
-                            if not r.outage), default=0.0),
+            "delay_s": max(alive) if alive else float("nan"),
+            "energy_j": sum(getattr(r, "energy_j", 0.0) for r in reports),
             "outages": sum(r.outage for r in reports),
             "per_client": [dataclasses.asdict(r) for r in reports],
         })
 
     @property
-    def total_bytes(self) -> int:
+    def total_bytes(self) -> float:
         return sum(r["bytes"] for r in self.rounds)
+
+    @property
+    def total_energy_j(self) -> float:
+        return sum(r.get("energy_j", 0.0) for r in self.rounds)
 
     @property
     def mean_round_bytes(self) -> float:
@@ -53,5 +84,6 @@ class CommLedger:
 
     @property
     def mean_round_delay(self) -> float:
-        return float(np.mean([r["delay_s"] for r in self.rounds])) \
-            if self.rounds else 0.0
+        vals = [r["delay_s"] for r in self.rounds
+                if not np.isnan(r["delay_s"])]
+        return float(np.mean(vals)) if vals else 0.0
