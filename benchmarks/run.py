@@ -50,6 +50,11 @@ def _benches():
         from benchmarks import uplink_bench
         uplink_bench.main(quick=quick, out="BENCH_uplink.json")
 
+    def straggler(quick):
+        print("\n# === straggler tolerance: bounded-staleness vs synchronous engine ===")
+        from benchmarks import straggler_bench
+        straggler_bench.main(quick=quick, out="BENCH_straggler.json")
+
     def fig5(quick):
         print("\n# === Fig. 5: PFTT accuracy / communication ===")
         from benchmarks import fig5_pftt
@@ -71,6 +76,7 @@ def _benches():
             "lora_path": lora_path,
             "cohort_shard": cohort_shard,
             "uplink": uplink,
+            "straggler": straggler,
             "fig5": fig5,
             "fig4": fig4,
             "roofline": lambda quick: roofline()}

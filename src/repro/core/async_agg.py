@@ -54,14 +54,30 @@ class StalenessWeightedAggregator:
         self._pending.append((client_tree, produced_round))
 
     def step(self):
-        """Advance one server round, merging everything that has arrived."""
-        for client_tree, produced in self._pending:
-            staleness = max(0, self.round - produced)
-            w = self.alpha * (1.0 + staleness) ** (-self.a)
-            self.global_tree = jax.tree_util.tree_map(
-                lambda g, c: ((1 - w) * g.astype(jnp.float32)
-                              + w * c.astype(jnp.float32)).astype(g.dtype),
-                self.global_tree, client_tree)
+        """Advance one server round, merging everything that has arrived.
+
+        The arrivals merge in ONE pass: the global keeps weight
+        ``Π(1-wᵢ)`` and the complement goes to the wᵢ-weighted mean of the
+        arrivals — permutation-invariant (a sequential pairwise merge would
+        give later-submitted updates more influence), and identical to the
+        pairwise merge when a single update arrives."""
+        if self._pending:
+            ws, cs = [], []
+            for client_tree, produced in self._pending:
+                staleness = max(0, self.round - produced)
+                ws.append(self.alpha * (1.0 + staleness) ** (-self.a))
+                cs.append(client_tree)
+            keep = float(np.prod([1.0 - w for w in ws]))
+            wsum = float(sum(ws))
+            if wsum > 0:
+                def merge(g, *leaves):
+                    mean = sum(w * c.astype(jnp.float32)
+                               for w, c in zip(ws, leaves)) / wsum
+                    return (keep * g.astype(jnp.float32)
+                            + (1.0 - keep) * mean).astype(g.dtype)
+
+                self.global_tree = jax.tree_util.tree_map(
+                    merge, self.global_tree, *cs)
         self._pending = []
         self.round += 1
         return self.global_tree
@@ -127,4 +143,7 @@ def dequantize_update(q: Dict, scales: Dict, template):
 
 
 def quantized_bytes(q: Dict) -> int:
-    return sum(v.size for v in q.values() if v is not None) + 4 * len(q)
+    """int8 payload bytes + one f32 scale per leaf that actually ships —
+    ``None`` (skipped) paths carry no scale on the wire."""
+    shipped = [v for v in q.values() if v is not None]
+    return sum(v.size for v in shipped) + 4 * len(shipped)

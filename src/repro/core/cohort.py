@@ -36,6 +36,19 @@ entries drop a client from the weighted mean, and an all-zero vector gates
 both the global update and the broadcast (clients keep local state), which
 reproduces the legacy skip-on-all-outage semantics bit-for-bit.
 
+Both builders take ``robust=True`` (``core/robust.py`` + ``wireless/
+faults.py``): the fused step then carries a device-side **pending-update
+buffer** (each client's latest produced-but-unmerged upload) and consumes
+per-round fault masks — ``train`` (client computed this round), ``recv``
+(client gets the broadcast), ``rejoin`` (crash recovery: optimizer state
+zeroed) — plus a host-computed **staleness-discounted aggregation weight
+vector** (``α·(1+s)^(-a)`` per ``core/robust.StalenessTracker``).  A client
+whose uplink failed (channel outage or injected fault) keeps its payload in
+the pending buffer and retransmits it next round instead of losing the
+work; a straggler's round-``k`` update merges at round ``k+s``.  With
+all-ones masks and undiscounted weights the robust body reduces exactly
+(bitwise) to the synchronous round.
+
 Both round builders take ``mesh=``/``client_axes=``: the round body is then
 wrapped in ``shard_map`` with the stacked client axis sharded over the
 given mesh axes (("pod","data") on the production mesh), so ONE fused round
@@ -64,9 +77,25 @@ from repro.comms import codec as codec_mod
 from repro.core.aggregation import (broadcast_merge_stacked,
                                     factored_fedavg_stacked, fedavg_stacked,
                                     masked_fedavg_stacked)
+from repro.core.aggregation import _pad_mask
 from repro.rlhf.ppo import PPOConfig, make_ppo_fns
 from repro.rlhf.rollout import generate
 from repro.sharding import client_shard_axes, shard_map
+
+
+def _where_clients(mask, new, old):
+    """Per-client select over stacked trees: leaf ← new where the client's
+    ``mask`` entry > 0, else old (leading-axis aligned broadcast)."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(_pad_mask(mask, n.ndim) > 0, n, o), new, old)
+
+
+def _zero_clients(mask, tree):
+    """Zero every leaf row whose client ``mask`` entry > 0 (crash-rejoin
+    optimizer reset: adamw moments and step counts re-init to zeros)."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.where(_pad_mask(mask, l.ndim) > 0,
+                            jnp.zeros_like(l), l), tree)
 
 
 class HostBatchStacker:
@@ -142,7 +171,8 @@ def build_supervised_round(local_step_fn: Callable,
                            upload_pred: Optional[Callable[[str], bool]] = None,
                            *, donate: bool = True, mesh=None,
                            client_axes=None, codec=None,
-                           factored_agg: bool = False):
+                           factored_agg: bool = False,
+                           robust: bool = False):
     """Fuse per-client local SGD + FedAvg + broadcast into one jitted step.
 
     ``local_step_fn(trainable, opt_state, batch) -> (trainable, opt_state,
@@ -174,10 +204,74 @@ def build_supervised_round(local_step_fn: Callable,
     global into every local slot.  Stacked inputs must then be sharded with
     the matching client-axis ``NamedSharding`` and the cohort size must be
     a multiple of the shard count (ghost-pad via ``cohort_sharding``).
+
+    ``robust``: straggler-tolerant signature — ``round_step(st_trainable,
+    st_opt, pending, batches, train_m, agg_w, recv_m, rejoin_m[, keys])``
+    → ``(st_trainable, st_opt, pending, losses[, bits])``.  ``pending`` is
+    the stacked device-side buffer of each client's latest
+    produced-but-unmerged upload (uploaded-subtree structure, zeros-init);
+    ``train_m``/``recv_m``/``rejoin_m`` are the round's (n,) fault masks
+    (``wireless.faults``) and ``agg_w`` is the host-computed
+    staleness-discounted aggregation weight vector
+    (``core/robust.StalenessTracker``): the server merges ``train`` clients'
+    fresh uploads and stragglers' pending payloads in the same weighted
+    mean, non-``recv`` clients keep their local shared values, and
+    ``rejoin`` clients get zeroed optimizer state.  All-ones masks +
+    undiscounted weights reduce bitwise to the synchronous round.
     """
     pred = upload_pred or (lambda p: True)
     axes = None if mesh is None else client_shard_axes(mesh, client_axes)
     agg_fn = factored_fedavg_stacked if factored_agg else fedavg_stacked
+
+    def robust_body(st_trainable, st_opt, pending, batches, train_m, agg_w,
+                    recv_m, rejoin_m, keys=None):
+        ref = trees.select(st_trainable, pred) if codec is not None else None
+
+        def client(tr, op, client_batches):
+            def step(carry, batch):
+                tr, op = carry
+                tr, op, loss = local_step_fn(tr, op, batch)
+                return (tr, op), loss
+
+            (tr, op), losses = jax.lax.scan(step, (tr, op), client_batches)
+            return tr, op, losses
+
+        trained_tr, trained_op, losses = jax.vmap(client)(
+            st_trainable, st_opt, batches)
+        # non-training clients (straggling / crashed / dropped) keep state
+        st_trainable = _where_clients(train_m, trained_tr, st_trainable)
+        st_opt = _where_clients(train_m, trained_op, st_opt)
+        losses = losses * train_m[:, None]
+
+        uploaded = trees.select(st_trainable, pred)
+        bits = jnp.zeros_like(agg_w)
+        if codec is not None:
+            uploaded, bits = jax.vmap(
+                lambda k, t, rf: codec_mod.roundtrip(codec, k, t, ref=rf)
+            )(keys, uploaded, ref)
+        # what goes on the air: a fresh upload supersedes the client's
+        # pending payload; stragglers retransmit the pending one
+        send = _where_clients(train_m, uploaded, pending)
+        agg = agg_fn(send, agg_w, axis_names=axes)
+        flat_agg = trees.flatten(agg)
+        wsum = agg_w.sum()
+        if axes is not None:
+            wsum = jax.lax.psum(wsum, axes)
+        gate = wsum > 0                   # nothing delivered → no-op update
+
+        def put(path, loc):
+            if path not in flat_agg:
+                return loc
+            bc = jnp.broadcast_to(flat_agg[path][None].astype(loc.dtype),
+                                  loc.shape)
+            rm = jnp.broadcast_to(_pad_mask(recv_m, loc.ndim) > 0, loc.shape)
+            return jnp.where(jnp.logical_and(gate, rm), bc, loc)
+
+        st_trainable = trees.map_with_path(put, st_trainable)
+        st_opt = _zero_clients(rejoin_m, st_opt)   # crash-rejoin: fresh opt
+        if codec is not None:
+            return st_trainable, st_opt, send, losses, bits
+        return st_trainable, st_opt, send, losses
 
     def round_body(st_trainable, st_opt, batches, weights, keys=None):
         # server-known reference for delta coding: the round-input value of
@@ -226,18 +320,24 @@ def build_supervised_round(local_step_fn: Callable,
             return st_trainable, st_opt, losses, bits
         return st_trainable, st_opt, losses
 
+    body = robust_body if robust else round_body
     if mesh is None:
-        round_step = round_body
+        round_step = body
     else:
         # the codec variant carries one extra stacked input (PRNG keys) and
-        # one extra stacked output (payload bits); shard_map calls
-        # round_body positionally so the same body serves both arities
+        # one extra stacked output (payload bits); the robust variant adds
+        # the pending buffer + three fault masks (all client-sharded);
+        # shard_map calls the body positionally so one body serves both
+        # arities
         pc = P(axes)
         n_in, n_out = (5, 4) if codec is not None else (4, 3)
-        round_step = shard_map(round_body, mesh=mesh,
+        if robust:
+            n_in, n_out = n_in + 4, n_out + 1
+        round_step = shard_map(body, mesh=mesh,
                                in_specs=(pc,) * n_in,
                                out_specs=(pc,) * n_out, check_vma=False)
-    return jax.jit(round_step, donate_argnums=(0, 1) if donate else ())
+    donate_args = ((0, 1, 2) if robust else (0, 1)) if donate else ()
+    return jax.jit(round_step, donate_argnums=donate_args)
 
 
 def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
@@ -245,7 +345,7 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
                     lambda_regs=None,
                     reg_pred: Optional[Callable[[str], bool]] = None,
                     donate: bool = True, mesh=None, client_axes=None,
-                    codec=None):
+                    codec=None, robust: bool = False):
     """Fuse PFIT's per-client PPO round + masked aggregation + masked
     broadcast into one jitted step.
 
@@ -273,6 +373,15 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
     sharded over the mesh, the global model replicated (``P()`` in and
     out), and the masked aggregation's numerator/denominator ``psum``ed.
     ``lambda_regs`` must then already cover the ghost-padded cohort.
+
+    ``robust``: straggler-tolerant signature — ``round_step(st_params,
+    st_opt, global_params, pending, st_masks, prompts, keys, alphas_help,
+    alphas_safe, agg_w, train_m, recv_m, rejoin_m[, codec_keys])`` →
+    ``(st_params, st_opt, new_global, pending, mean_rewards, mean_kls
+    [, bits])``: same pending-buffer / fault-mask / discounted-weight
+    contract as the supervised builder, with the masked aggregation
+    consuming fresh uploads and retransmitted pending payloads in one
+    weighted mean and the masked broadcast gated per client on ``recv_m``.
     """
     prep, step = make_ppo_fns(model, opt, ppo_cfg, prompt_len)
     reg_pred = reg_pred or (lambda p: p.startswith("stages"))
@@ -281,11 +390,7 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
     use_reg = lams is not None and bool((lams > 0).any())
     axes = None if mesh is None else client_shard_axes(mesh, client_axes)
 
-    def round_body(st_params, st_opt, global_params, st_masks, prompts, keys,
-                   alphas_help, alphas_safe, weights, st_lams,
-                   codec_keys=None):
-        ref = st_params if codec is not None else None   # round-input params
-
+    def _make_client(global_params):
         def client(params, opt_state, grad_mask, client_prompts, key,
                    a_help, a_safe, lam):
             toks = generate(model, params, client_prompts, gen_len, key,
@@ -305,8 +410,51 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
                     params, opt_state, toks, old_logp, adv, ret, resp_mask,
                     grad_mask)
             return params, opt_state, reward.mean(), mean_kl
+        return client
 
-        st_params, st_opt, mean_rewards, mean_kls = jax.vmap(client)(
+    def robust_ppo_body(st_params, st_opt, global_params, pending, st_masks,
+                        prompts, keys, alphas_help, alphas_safe, agg_w,
+                        train_m, recv_m, rejoin_m, st_lams, codec_keys=None):
+        ref = st_params if codec is not None else None   # round-input params
+        trained_p, trained_o, mean_rewards, mean_kls = jax.vmap(
+            _make_client(global_params))(
+            st_params, st_opt, st_masks, prompts, keys, alphas_help,
+            alphas_safe, st_lams)
+        st_params = _where_clients(train_m, trained_p, st_params)
+        st_opt = _where_clients(train_m, trained_o, st_opt)
+        mean_rewards = mean_rewards * train_m
+        mean_kls = mean_kls * train_m
+
+        uploaded, bits = st_params, jnp.zeros_like(agg_w)
+        if codec is not None:
+            uploaded, bits = jax.vmap(
+                lambda k, t, rf, m: codec_mod.roundtrip(
+                    codec, k, t, ref=rf, bit_weights=m)
+            )(codec_keys, st_params, ref, st_masks)
+        # fresh upload supersedes the pending payload; stragglers/outage
+        # clients retransmit the buffered one with its staleness discount
+        send = _where_clients(train_m, uploaded, pending)
+        new_global = masked_fedavg_stacked(global_params, send, st_masks,
+                                           agg_w, axis_names=axes)
+        wsum = agg_w.sum()
+        if axes is not None:
+            wsum = jax.lax.psum(wsum, axes)
+        merged = broadcast_merge_stacked(st_params, new_global, st_masks,
+                                         gate=wsum > 0)
+        st_params = _where_clients(recv_m, merged, st_params)
+        st_opt = _zero_clients(rejoin_m, st_opt)   # crash-rejoin: fresh opt
+        if codec is not None:
+            return (st_params, st_opt, new_global, send, mean_rewards,
+                    mean_kls, bits)
+        return st_params, st_opt, new_global, send, mean_rewards, mean_kls
+
+    def round_body(st_params, st_opt, global_params, st_masks, prompts, keys,
+                   alphas_help, alphas_safe, weights, st_lams,
+                   codec_keys=None):
+        ref = st_params if codec is not None else None   # round-input params
+
+        st_params, st_opt, mean_rewards, mean_kls = jax.vmap(
+            _make_client(global_params))(
             st_params, st_opt, st_masks, prompts, keys, alphas_help,
             alphas_safe, st_lams)
 
@@ -332,28 +480,54 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
             return st_params, st_opt, new_global, mean_rewards, mean_kls, bits
         return st_params, st_opt, new_global, mean_rewards, mean_kls
 
+    inner = robust_ppo_body if robust else round_body
     if mesh is None:
-        body = round_body
+        body = inner
     else:
         pc, pr = P(axes), P()
         n_extra = 1 if codec is not None else 0
-        body = shard_map(round_body, mesh=mesh,
-                         in_specs=(pc, pc, pr, pc, pc, pc, pc, pc, pc, pc)
-                         + (pc,) * n_extra,
-                         out_specs=(pc, pc, pr, pc, pc) + (pc,) * n_extra,
-                         check_vma=False)
+        if robust:
+            # pending + three fault masks + agg_w are client-sharded; the
+            # extra `send` output (the next pending buffer) likewise
+            in_specs = ((pc, pc, pr, pc, pc, pc, pc, pc, pc, pc, pc, pc, pc,
+                         pc) + (pc,) * n_extra)
+            out_specs = (pc, pc, pr, pc, pc, pc) + (pc,) * n_extra
+        else:
+            in_specs = (pc, pc, pr, pc, pc, pc, pc, pc, pc, pc) \
+                + (pc,) * n_extra
+            out_specs = (pc, pc, pr, pc, pc) + (pc,) * n_extra
+        body = shard_map(inner, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
 
-    def round_step(st_params, st_opt, global_params, st_masks, prompts, keys,
-                   alphas_help, alphas_safe, weights, codec_keys=None):
+    def _st_lams(alphas_help):
         # per-client λ rides in as a stacked arg so the shard_map slices it
         # with the rest of the client axis (a closed-over vector would stay
         # whole-cohort-sized and break the local vmap)
-        st_lams = (jnp.asarray(lams) if use_reg
-                   else jnp.zeros_like(alphas_help))
-        args = (st_params, st_opt, global_params, st_masks, prompts, keys,
-                alphas_help, alphas_safe, weights, st_lams)
-        if codec is not None:
-            args = args + (codec_keys,)
-        return body(*args)
+        return (jnp.asarray(lams) if use_reg
+                else jnp.zeros_like(alphas_help))
 
-    return jax.jit(round_step, donate_argnums=(0, 1) if donate else ())
+    if robust:
+        def round_step(st_params, st_opt, global_params, pending, st_masks,
+                       prompts, keys, alphas_help, alphas_safe, agg_w,
+                       train_m, recv_m, rejoin_m, codec_keys=None):
+            args = (st_params, st_opt, global_params, pending, st_masks,
+                    prompts, keys, alphas_help, alphas_safe, agg_w,
+                    train_m, recv_m, rejoin_m, _st_lams(alphas_help))
+            if codec is not None:
+                args = args + (codec_keys,)
+            return body(*args)
+
+        donate_args = (0, 1, 3) if donate else ()
+    else:
+        def round_step(st_params, st_opt, global_params, st_masks, prompts,
+                       keys, alphas_help, alphas_safe, weights,
+                       codec_keys=None):
+            args = (st_params, st_opt, global_params, st_masks, prompts,
+                    keys, alphas_help, alphas_safe, weights,
+                    _st_lams(alphas_help))
+            if codec is not None:
+                args = args + (codec_keys,)
+            return body(*args)
+
+        donate_args = (0, 1) if donate else ()
+    return jax.jit(round_step, donate_argnums=donate_args)

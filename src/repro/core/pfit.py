@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,9 +46,11 @@ from repro.comms import ChannelBudget, get_codec
 from repro.comms import codec as codec_mod
 from repro.configs import get_config
 from repro.core.aggregation import (factored_fedavg_stacked, fedavg,
-                                    masked_fedavg)
+                                    fedavg_stacked, masked_fedavg,
+                                    masked_fedavg_stacked)
 from repro.core.cohort import (HostBatchStacker, build_ppo_round,
                                build_supervised_round)
+from repro.core.robust import StalenessConfig, StalenessTracker
 from repro.core.rewards import ClientPreference, DoubleReward
 from repro.data.partition import client_topic_preferences
 from repro.data.synthetic import InstructionCorpus, N_TOPICS
@@ -93,6 +95,13 @@ class PFITConfig:
     factored_agg: bool = False     # shepherd: SVD re-projection aggregation
                                    # of LoRA factor pairs (no densification)
     tx_power_w: float = 0.5        # uplink transmit power (energy charge)
+    fault_plan: Optional[object] = None   # wireless.faults.FaultPlan —
+                                   # straggler-tolerant robust round (the
+                                   # zero plan is bitwise the sync engine)
+    staleness_alpha: float = 1.0   # FedAsync α (cancels under normalization)
+    staleness_a: float = 0.0       # staleness exponent a in α·(1+s)^(-a)
+    max_staleness: int = 0         # pending payloads older than this drop;
+                                   # 0 = sync drop-on-failure semantics
     ppo: PPOConfig = PPOConfig()
 
 
@@ -226,6 +235,15 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
     budget = ChannelBudget(channel, tx_power_w=cfg.tx_power_w)
     ledger = CommLedger()
     reward_curve = []
+
+    # ---- straggler-tolerant runtime: one fault trace + staleness tracker
+    # shared by the engine and the legacy loop (core/robust.py)
+    robust = cfg.fault_plan is not None
+    trace = cfg.fault_plan.realize(cfg.n_clients, cfg.rounds) if robust \
+        else None
+    tracker = StalenessTracker(cfg.n_clients, StalenessConfig(
+        alpha=cfg.staleness_alpha, a=cfg.staleness_a,
+        max_staleness=cfg.max_staleness)) if robust else None
     codec = get_codec(cfg.uplink_codec)
     codec_key = jax.random.fold_in(key, 0x0C0DEC)
     # legacy-loop codec roundtrip (the engine vmaps the same function inside
@@ -283,6 +301,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
     use_engine = cfg.engine
     cs = cohort_sharding(mesh, cfg.n_clients, client_axes) \
         if (mesh is not None and use_engine) else None
+    pending = None
     if use_engine:
         pad = cs.pad if cs is not None else (lambda xs: xs)
         mesh_kw = dict(mesh=cs.mesh if cs is not None else None,
@@ -293,7 +312,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
             round_step = build_supervised_round(shepherd_local_step,
                                                 codec=codec,
                                                 factored_agg=cfg.factored_agg,
-                                                **mesh_kw)
+                                                robust=robust, **mesh_kw)
             cohort_tr = _shard(trees.stack(pad([cl["lora"]
                                                 for cl in clients])))
             cohort_opt = _shard(trees.stack(pad([cl["opt_state"]
@@ -305,7 +324,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
             ppo_round_step = build_ppo_round(
                 model, opt, cfg.ppo, cfg.prompt_len, cfg.gen_len, quality_fn,
                 lambda_regs=pad([p.lambda_reg for p in prefs]), codec=codec,
-                **mesh_kw)
+                robust=robust, **mesh_kw)
             cohort_tr = _shard(trees.stack(pad([cl["params"]
                                                 for cl in clients])))
             cohort_opt = _shard(trees.stack(pad([cl["opt_state"]
@@ -318,15 +337,34 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
             payloads = [tree_bytes(clients[ci]["params"],
                                    nonzero_mask=client_masks[ci])
                         for ci in range(cfg.n_clients)]
+        if robust:   # device-side pending-payload buffer (zeros never merge:
+            pending = jax.tree_util.tree_map(  # their agg weight is 0)
+                jnp.zeros_like, cohort_tr)
+    elif robust:     # legacy-loop pending buffers (parity oracle)
+        kind = "lora" if cfg.method == "shepherd" else "params"
+        pending_list = [jax.tree_util.tree_map(jnp.zeros_like, cl[kind])
+                        for cl in clients]
+
+    def _vec(v, fill=0.0):
+        """Device round vector, ghost-padded with ``fill``."""
+        return jax.device_put(cs.pad_vec(v, fill), cs.named) \
+            if cs is not None else jnp.asarray(v)
 
     for rnd in range(cfg.rounds):
         gains = channel.realize(cfg.n_clients)
+        rplan = None
+        if robust:
+            rf = trace.round(rnd)
+            gains = gains * rf.gain_scale       # injected SNR dips
+            rplan = tracker.begin_round(rf, channel.outage_weights(gains))
         rnd_key = jax.random.fold_in(codec_key, rnd)
         reports = []
         if use_engine:
-            w = channel.outage_weights(gains)
+            w = rplan.agg_w if robust else channel.outage_weights(gains)
             weights = jax.device_put(cs.pad_weights(w), cs.named) \
                 if cs is not None else jnp.asarray(w)
+            margs = (_vec(rplan.train, 1.0), weights, _vec(rplan.recv, 1.0),
+                     _vec(rplan.rejoin, 0.0)) if robust else None
             ck = None
             if codec is not None:
                 ck = jnp.stack(pad([jax.random.fold_in(rnd_key, ci)
@@ -344,7 +382,16 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 batches = stacker(pad(
                     [[shepherd_batch(ci) for _ in range(cfg.shepherd_steps)]
                      for ci in range(cfg.n_clients)]))
-                if codec is None:
+                if robust and codec is None:
+                    cohort_tr, cohort_opt, pending, _ = round_step(
+                        cohort_tr, cohort_opt, pending, batches, *margs)
+                    bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
+                elif robust:
+                    cohort_tr, cohort_opt, pending, _, eng_bits = round_step(
+                        cohort_tr, cohort_opt, pending, batches, *margs, ck)
+                    bits = [float(b)
+                            for b in np.asarray(eng_bits)[:cfg.n_clients]]
+                elif codec is None:
                     cohort_tr, cohort_opt, _ = round_step(
                         cohort_tr, cohort_opt, batches, weights)
                     bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
@@ -365,7 +412,25 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 keys = _shard(jnp.stack(pad(
                     [jax.random.fold_in(key, rnd * 17 + ci)
                      for ci in range(cfg.n_clients)])))
-                if codec is None:
+                if robust and codec is None:
+                    (cohort_tr, cohort_opt, global_params, pending, _,
+                     _) = ppo_round_step(cohort_tr, cohort_opt, global_params,
+                                         pending, st_masks, prompts, keys,
+                                         alphas_h, alphas_s, weights,
+                                         _vec(rplan.train, 1.0),
+                                         _vec(rplan.recv, 1.0),
+                                         _vec(rplan.rejoin, 0.0))
+                    bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
+                elif robust:
+                    (cohort_tr, cohort_opt, global_params, pending, _, _,
+                     eng_bits) = ppo_round_step(
+                        cohort_tr, cohort_opt, global_params, pending,
+                        st_masks, prompts, keys, alphas_h, alphas_s, weights,
+                        _vec(rplan.train, 1.0), _vec(rplan.recv, 1.0),
+                        _vec(rplan.rejoin, 0.0), ck)
+                    bits = [float(b)
+                            for b in np.asarray(eng_bits)[:cfg.n_clients]]
+                elif codec is None:
                     (cohort_tr, cohort_opt, global_params, _,
                      _) = ppo_round_step(cohort_tr, cohort_opt, global_params,
                                          st_masks, prompts, keys, alphas_h,
@@ -381,18 +446,32 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 for cl, p in zip(clients,
                                  trees.unstack(cohort_tr, cfg.n_clients)):
                     cl["params"] = p
-            reports = budget.round_reports(bits, gains)
+            if robust:
+                charged = tracker.end_round(rplan, np.asarray(bits,
+                                                              np.float64))
+                reports = [budget.report(charged[ci], gains[ci])
+                           for ci in range(cfg.n_clients)
+                           if rplan.attempt[ci] > 0]
+            else:
+                reports = budget.round_reports(bits, gains)
             ledger.log_round(reports)
             # (aggregation + broadcast already fused into the round step)
         else:
+            fresh = np.zeros(cfg.n_clients, np.float64)
             for ci, cl in enumerate(clients):
                 if cfg.method == "shepherd":
+                    # draw the round's batches even when a fault skips this
+                    # client — keeps the host RNG stream aligned with the
+                    # engine (and with the fault-free run)
+                    samples = [corpus.sample(cfg.rollout_batch,
+                                             topic_probs=topic_prefs[ci],
+                                             helpful_p=0.9, unsafe_p=0.05,
+                                             rng=rng)
+                               for _ in range(cfg.shepherd_steps)]
+                    if robust and rplan.train[ci] == 0:
+                        continue
                     ref = cl["lora"] if codec is not None else None
-                    for _ in range(cfg.shepherd_steps):
-                        s = corpus.sample(cfg.rollout_batch,
-                                          topic_probs=topic_prefs[ci],
-                                          helpful_p=0.9, unsafe_p=0.05,
-                                          rng=rng)
+                    for s in samples:
                         toks = jnp.asarray(s["tokens"])
                         batch = {"tokens": toks[:, :-1],
                                  "labels": toks[:, 1:],
@@ -400,19 +479,22 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                         cl["lora"], cl["opt_state"], _ = shepherd_step(
                             cl["lora"], cl["opt_state"], batch)
                     if codec is None:
-                        bits_ci = tree_bytes(cl["lora"]) * 8
+                        fresh[ci] = tree_bytes(cl["lora"]) * 8
                     else:
                         dec, b = rt_lora_jit(
                             jax.random.fold_in(rnd_key, ci), cl["lora"], ref)
                         cl["decoded_upload"] = dec
-                        bits_ci = float(b)
-                    reports.append(budget.report(bits_ci, gains[ci]))
+                        fresh[ci] = float(b)
+                    if not robust:
+                        reports.append(budget.report(fresh[ci], gains[ci]))
                     continue
 
                 # --- PPO with the personalized reward
-                ref = cl["params"] if codec is not None else None
                 s = corpus.sample(cfg.rollout_batch,
                                   topic_probs=topic_prefs[ci], rng=rng)
+                if robust and rplan.train[ci] == 0:
+                    continue
+                ref = cl["params"] if codec is not None else None
                 prompts = jnp.asarray(s["tokens"][:, :cfg.prompt_len])
                 toks = gen_jit(cl["params"], prompts,
                                jax.random.fold_in(key, rnd * 17 + ci),
@@ -433,24 +515,67 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                     cl["params"], global_params, cl["opt_state"],
                     toks, reward, grad_mask=client_masks[ci])
                 if codec is None:
-                    bits_ci = tree_bytes(cl["params"],
-                                         nonzero_mask=client_masks[ci]) * 8
+                    fresh[ci] = tree_bytes(cl["params"],
+                                           nonzero_mask=client_masks[ci]) * 8
                 else:
                     dec, b = rt_jit(jax.random.fold_in(rnd_key, ci),
                                     cl["params"], ref, client_masks[ci])
                     cl["decoded_upload"] = dec
-                    bits_ci = float(b)
-                reports.append(budget.report(bits_ci, gains[ci]))
+                    fresh[ci] = float(b)
+                if not robust:
+                    reports.append(budget.report(fresh[ci], gains[ci]))
+            if robust:
+                charged = tracker.end_round(rplan, fresh)
+                reports = [budget.report(charged[ci], gains[ci])
+                           for ci in range(cfg.n_clients)
+                           if rplan.attempt[ci] > 0]
             ledger.log_round(reports)
 
+            def upload(ci, kind):
+                if codec is not None:
+                    return clients[ci]["decoded_upload"]
+                return clients[ci][kind]
+
             # --- aggregation (over the lossy decoded uploads with a codec)
-            alive = [ci for ci, r in enumerate(reports) if not r.outage]
-            if alive:
-                def upload(ci, kind):
-                    if codec is not None:
-                        return clients[ci]["decoded_upload"]
-                    return clients[ci][kind]
-                if cfg.method == "shepherd":
+            if robust:
+                # legacy mirror of the robust fused body: same stacked ops,
+                # same tracker outputs (fresh uploads supersede pending,
+                # stragglers retransmit, recv gates the broadcast, rejoin
+                # resets the optimizer)
+                kind = "lora" if cfg.method == "shepherd" else "params"
+                send_list = [upload(ci, kind) if rplan.train[ci] > 0
+                             else pending_list[ci]
+                             for ci in range(cfg.n_clients)]
+                pending_list = send_list
+                aggw = jnp.asarray(rplan.agg_w)
+                if float(rplan.agg_w.sum()) > 0:
+                    st_send = trees.stack(send_list)
+                    if cfg.method == "shepherd":
+                        agg = (factored_fedavg_stacked(st_send, aggw)
+                               if cfg.factored_agg
+                               else fedavg_stacked(st_send, aggw))
+                        for ci, cl in enumerate(clients):
+                            if rplan.recv[ci] > 0:
+                                cl["lora"] = agg
+                    else:
+                        global_params = masked_fedavg_stacked(
+                            global_params, st_send,
+                            trees.stack(client_masks), aggw)
+                        for ci, cl in enumerate(clients):
+                            if rplan.recv[ci] > 0:
+                                cl["params"] = jax.tree_util.tree_map(
+                                    lambda loc, glob, m: jnp.where(
+                                        jnp.broadcast_to(m, loc.shape) > 0,
+                                        glob, loc),
+                                    cl["params"], global_params,
+                                    client_masks[ci])
+                for ci, cl in enumerate(clients):
+                    if rplan.rejoin[ci] > 0:
+                        cl["opt_state"] = jax.tree_util.tree_map(
+                            jnp.zeros_like, cl["opt_state"])
+            else:
+                alive = [ci for ci, r in enumerate(reports) if not r.outage]
+                if alive and cfg.method == "shepherd":
                     ups = [upload(ci, "lora") for ci in alive]
                     if cfg.factored_agg:
                         agg = factored_fedavg_stacked(trees.stack(ups))
@@ -458,7 +583,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                         agg = fedavg(ups)
                     for cl in clients:
                         cl["lora"] = agg
-                else:
+                elif alive:
                     global_params = masked_fedavg(
                         global_params,
                         [upload(ci, "params") for ci in alive],

@@ -51,6 +51,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import os
 from typing import Dict, List, Optional
 
 import jax
@@ -58,11 +60,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import trees
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.comms import ChannelBudget, get_codec
 from repro.comms import codec as codec_mod
-from repro.core.aggregation import factored_fedavg_stacked, fedavg
+from repro.core.aggregation import (factored_fedavg_stacked, fedavg,
+                                    fedavg_stacked)
 from repro.core.cohort import (HostBatchStacker, build_cohort_eval,
                                build_supervised_round)
+from repro.core.robust import StalenessConfig, StalenessTracker
 from repro.configs import get_config
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import batch_iterator
@@ -105,6 +110,18 @@ class PFTTConfig:
                                    # re-projection (never densified)
     tx_power_w: float = 0.5        # uplink transmit power for the energy
                                    # charge (ChannelBudget)
+    fault_plan: Optional[object] = None   # wireless.faults.FaultPlan —
+                                   # enables the straggler-tolerant robust
+                                   # round (the zero plan is bitwise the
+                                   # synchronous engine)
+    staleness_alpha: float = 1.0   # FedAsync α (cancels under weight
+                                   # normalization — kept for async_agg parity)
+    staleness_a: float = 0.0       # staleness exponent a in α·(1+s)^(-a)
+    max_staleness: int = 0         # drop pending payloads older than this;
+                                   # 0 = sync drop-on-failure semantics
+    ckpt_dir: Optional[str] = None # save the stacked round state per round
+                                   # (engine path) for kill + --resume
+    resume: bool = False           # restart from ckpt_dir's last round
 
 
 def _upload_pred(method: str):
@@ -315,6 +332,16 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
     ledger = CommLedger()
     upload_pred = _upload_pred(cfg.method)
     accs_per_round = []
+
+    # ---- straggler-tolerant runtime (core/robust.py + wireless/faults.py):
+    # the fault trace and the staleness tracker are shared verbatim by the
+    # engine and the legacy loop, so both paths see identical weights/charges
+    robust = cfg.fault_plan is not None
+    trace = cfg.fault_plan.realize(cfg.n_clients, cfg.rounds) if robust \
+        else None
+    tracker = StalenessTracker(cfg.n_clients, StalenessConfig(
+        alpha=cfg.staleness_alpha, a=cfg.staleness_a,
+        max_staleness=cfg.max_staleness)) if robust else None
     codec = get_codec(cfg.uplink_codec)
     codec_key = jax.random.fold_in(key, 0x0C0DEC)
     # legacy-loop codec roundtrip (per client; the engine vmaps the same
@@ -334,24 +361,76 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         shared = trees.select(trainable, upload_pred)
         return tree_bytes(shared) + act_bits() / 8
 
+    pending = None
     if use_engine:
         round_step = build_supervised_round(
             local_step, upload_pred,
             mesh=cs.mesh if cs is not None else None,
             client_axes=cs.axes if cs is not None else None,
-            codec=codec, factored_agg=cfg.factored_agg)
+            codec=codec, factored_agg=cfg.factored_agg, robust=robust)
         pad = cs.pad if cs is not None else (lambda xs: xs)
         cohort_tr = trees.stack(pad([cl["trainable"] for cl in clients]))
         cohort_opt = trees.stack(pad([cl["opt_state"] for cl in clients]))
         if cs is not None:     # client axis over the mesh, base replicated
             cohort_tr = jax.device_put(cohort_tr, cs.named)
             cohort_opt = jax.device_put(cohort_opt, cs.named)
+        if robust:             # pending-payload buffer (uploaded subtree)
+            pending = jax.tree_util.tree_map(
+                jnp.zeros_like, trees.select(cohort_tr, upload_pred))
         payloads = [payload_bytes(cl["trainable"]) for cl in clients]
         stacker = HostBatchStacker(   # host buffer reused round-over-round
             sharding=cs.named if cs is not None else None)
+    elif robust:               # legacy-loop pending buffer (parity oracle)
+        pending_list = [jax.tree_util.tree_map(
+            jnp.zeros_like, trees.select(cl["trainable"], upload_pred))
+            for cl in clients]
 
-    for rnd in range(cfg.rounds):
+    def _vec(v, fill=0.0):
+        """Device round vector, ghost-padded with ``fill``."""
+        return jax.device_put(cs.pad_vec(v, fill), cs.named) \
+            if cs is not None else jnp.asarray(v)
+
+    # ---- round-level checkpoint/resume (engine path): the stacked device
+    # state restores exactly; the host RNG streams (channel fading draws,
+    # per-client batch iterators) are replayed to the resume point so the
+    # continued run is the uninterrupted run
+    ckpt_file = meta_file = None
+    start_round = 0
+    if cfg.ckpt_dir and use_engine:
+        ckpt_file = os.path.join(cfg.ckpt_dir, f"pftt_{cfg.method}.npz")
+        meta_file = os.path.join(cfg.ckpt_dir, f"pftt_{cfg.method}.json")
+        if cfg.resume and os.path.exists(meta_file):
+            with open(meta_file) as f:
+                meta = json.load(f)
+            start_round = int(meta["next_round"])
+            accs_per_round[:] = meta["accs_per_round"]
+            ledger.rounds[:] = meta["ledger_rounds"]
+            tpl = {"trainable": cohort_tr, "opt": cohort_opt}
+            if robust:
+                tpl["pending"] = pending
+                tracker.load_state_dict(meta["tracker"])
+            state = load_checkpoint(ckpt_file, tpl)
+            cohort_tr, cohort_opt = state["trainable"], state["opt"]
+            if robust:
+                pending = state["pending"]
+            if cs is not None:
+                cohort_tr = jax.device_put(cohort_tr, cs.named)
+                cohort_opt = jax.device_put(cohort_opt, cs.named)
+                if robust:
+                    pending = jax.device_put(pending, cs.named)
+            for _ in range(start_round):        # burn the skipped rounds'
+                channel.realize(cfg.n_clients)  # host RNG draws
+                for ci in range(cfg.n_clients):
+                    for _s in range(cfg.local_steps):
+                        next(client_iters[ci])
+
+    for rnd in range(start_round, cfg.rounds):
         gains = channel.realize(cfg.n_clients)
+        rplan = None
+        if robust:
+            rf = trace.round(rnd)
+            gains = gains * rf.gain_scale       # injected SNR dips
+            rplan = tracker.begin_round(rf, channel.outage_weights(gains))
         rnd_key = jax.random.fold_in(codec_key, rnd)
         reports = []
         if use_engine:
@@ -363,64 +442,135 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
             batches = stacker(pad(
                 [[next(client_iters[ci]) for _ in range(cfg.local_steps)]
                  for ci in range(cfg.n_clients)]))
-            w = channel.outage_weights(gains)
+            w = rplan.agg_w if robust else channel.outage_weights(gains)
             weights = jax.device_put(cs.pad_weights(w), cs.named) \
                 if cs is not None else jnp.asarray(w)
-            if codec is None:
-                cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
-                                                      batches, weights)
-                bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
-            else:
+            ck = None
+            if codec is not None:
                 ck = jnp.stack(pad(
                     [jax.random.fold_in(rnd_key, ci)
                      for ci in range(cfg.n_clients)]))
                 if cs is not None:
                     ck = jax.device_put(ck, cs.named)
+            if robust:
+                # ghosts train + receive like real clients (as in the sync
+                # engine) but never rejoin and carry zero agg weight
+                margs = (_vec(rplan.train, 1.0), weights,
+                         _vec(rplan.recv, 1.0), _vec(rplan.rejoin, 0.0))
+                if codec is None:
+                    cohort_tr, cohort_opt, pending, _ = round_step(
+                        cohort_tr, cohort_opt, pending, batches, *margs)
+                    fresh = np.asarray([payloads[ci] * 8
+                                        for ci in range(cfg.n_clients)])
+                else:
+                    cohort_tr, cohort_opt, pending, _, eng_bits = round_step(
+                        cohort_tr, cohort_opt, pending, batches, *margs, ck)
+                    fresh = (np.asarray(eng_bits, np.float64)[:cfg.n_clients]
+                             + act_bits())
+                charged = tracker.end_round(rplan, fresh)
+                reports = [budget.report(charged[ci], gains[ci])
+                           for ci in range(cfg.n_clients)
+                           if rplan.attempt[ci] > 0]
+            elif codec is None:
+                cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
+                                                      batches, weights)
+                bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
+                reports = budget.round_reports(bits, gains)
+            else:
                 cohort_tr, cohort_opt, _, eng_bits = round_step(
                     cohort_tr, cohort_opt, batches, weights, ck)
                 bits = [float(b) + act_bits()
                         for b in np.asarray(eng_bits)[:cfg.n_clients]]
-            reports = budget.round_reports(bits, gains)
+                reports = budget.round_reports(bits, gains)
         else:
+            fresh = np.zeros(cfg.n_clients, np.float64)
             for ci, cl in enumerate(clients):
+                # every client draws its round batches even when a fault
+                # skips its training — keeps the host data stream aligned
+                # with the engine (and with the fault-free run)
+                round_batches = [next(client_iters[ci])
+                                 for _ in range(cfg.local_steps)]
+                if robust and rplan.train[ci] == 0:
+                    continue
                 ref = (trees.select(cl["trainable"], upload_pred)
                        if codec is not None else None)
-                for _ in range(cfg.local_steps):
-                    batch = {k: jnp.asarray(v) for k, v in
-                             next(client_iters[ci]).items()}
+                for b_np in round_batches:
+                    batch = {k: jnp.asarray(v) for k, v in b_np.items()}
                     cl["trainable"], cl["opt_state"], loss = local_step_jit(
                         cl["trainable"], cl["opt_state"], batch)
                 if codec is None:
-                    bits_ci = payload_bytes(cl["trainable"]) * 8
+                    fresh[ci] = payload_bytes(cl["trainable"]) * 8
                 else:
                     dec, b = rt_jit(jax.random.fold_in(rnd_key, ci),
                                     trees.select(cl["trainable"],
                                                  upload_pred), ref)
                     cl["decoded_upload"] = dec
-                    bits_ci = float(b) + act_bits()
-                reports.append(budget.report(bits_ci, gains[ci]))
+                    fresh[ci] = float(b) + act_bits()
+                if not robust:
+                    reports.append(budget.report(fresh[ci], gains[ci]))
+            if robust:
+                charged = tracker.end_round(rplan, fresh)
+                reports = [budget.report(charged[ci], gains[ci])
+                           for ci in range(cfg.n_clients)
+                           if rplan.attempt[ci] > 0]
         ledger.log_round(reports)
 
         # --- aggregation over surviving clients (partial for pftt); in the
         # engine path this already happened inside the fused round step.
         # With a codec the server aggregates the lossy decoded uploads.
-        alive = [ci for ci, r in enumerate(reports) if not r.outage]
-        if alive and not use_engine:
-            shared_trees = [
-                clients[ci]["decoded_upload"] if codec is not None
-                else trees.select(clients[ci]["trainable"], upload_pred)
-                for ci in alive]
-            if cfg.factored_agg:
-                agg = factored_fedavg_stacked(trees.stack(shared_trees))
-            else:
-                agg = fedavg(shared_trees)
-            for cl in clients:
-                cl["trainable"] = trees.merge(cl["trainable"], agg)
+        if robust and not use_engine:
+            # legacy mirror of the robust fused body: same stacked ops, same
+            # tracker outputs — fresh uploads supersede pending payloads,
+            # stragglers retransmit, recv gates the broadcast, rejoin resets
+            # the optimizer
+            send_list = [
+                (clients[ci]["decoded_upload"] if codec is not None
+                 else trees.select(clients[ci]["trainable"], upload_pred))
+                if rplan.train[ci] > 0 else pending_list[ci]
+                for ci in range(cfg.n_clients)]
+            pending_list = send_list
+            if float(rplan.agg_w.sum()) > 0:
+                st_send = trees.stack(send_list)
+                aggw = jnp.asarray(rplan.agg_w)
+                agg = (factored_fedavg_stacked(st_send, aggw)
+                       if cfg.factored_agg else fedavg_stacked(st_send, aggw))
+                for ci, cl in enumerate(clients):
+                    if rplan.recv[ci] > 0:
+                        cl["trainable"] = trees.merge(cl["trainable"], agg)
+            for ci, cl in enumerate(clients):
+                if rplan.rejoin[ci] > 0:
+                    cl["opt_state"] = jax.tree_util.tree_map(
+                        jnp.zeros_like, cl["opt_state"])
+        elif not use_engine:
+            alive = [ci for ci, r in enumerate(reports) if not r.outage]
+            if alive:
+                shared_trees = [
+                    clients[ci]["decoded_upload"] if codec is not None
+                    else trees.select(clients[ci]["trainable"], upload_pred)
+                    for ci in alive]
+                if cfg.factored_agg:
+                    agg = factored_fedavg_stacked(trees.stack(shared_trees))
+                else:
+                    agg = fedavg(shared_trees)
+                for cl in clients:
+                    cl["trainable"] = trees.merge(cl["trainable"], agg)
 
         accs = eval_round_accs(
             cohort_tr if use_engine
             else trees.stack([cl["trainable"] for cl in clients]))
         accs_per_round.append(float(np.mean(accs)))
+        if ckpt_file is not None:   # round-level checkpoint (kill-safe)
+            state = {"trainable": cohort_tr, "opt": cohort_opt}
+            if robust:
+                state["pending"] = pending
+            save_checkpoint(ckpt_file, state)
+            meta = {"next_round": rnd + 1,
+                    "accs_per_round": accs_per_round,
+                    "ledger_rounds": ledger.rounds}
+            if robust:
+                meta["tracker"] = tracker.state_dict()
+            with open(meta_file, "w") as f:
+                json.dump(meta, f)
         if cfg.verbose and rnd % 5 == 0:
             print(f"[pftt:{cfg.method}] round {rnd} acc {accs_per_round[-1]:.3f} "
                   f"bytes {ledger.rounds[-1]['bytes']:,} "

@@ -1,0 +1,155 @@
+"""Host-side runtime for the straggler-tolerant federated round.
+
+The compiled robust round step (``core/cohort.py`` with ``robust=True``)
+is deliberately dumb: it consumes per-round fault masks and a pre-computed
+aggregation weight vector, and carries the pending-payload buffer.  ALL the
+bookkeeping that decides those inputs — which client has a payload on the
+air, how stale it is, what the ``α·(1+s)^(-a)`` discount works out to, how
+many bits the retransmission charges — is a pure function of host-known
+quantities (fault masks + channel outage outcomes), so it lives here, on
+the host, where the fused engine and the legacy per-client loop can share
+it verbatim.  That sharing is what makes engine-vs-loop parity under
+injected faults exact: both paths feed identical weight vectors and ledger
+charges from one ``StalenessTracker``.
+
+Per-round contract (both execution paths):
+
+1. ``plan = tracker.begin_round(faults, outage_w)`` — ages the pending
+   buffer, drops payloads staler than ``max_staleness``, decides who
+   attempts an uplink (``tx`` clients holding a fresh or pending payload),
+   who delivers (attempt minus channel outage), and folds the FedAsync
+   discount ``α·(1+s)^(-a)`` into ``plan.agg_w``.
+2. The round body runs with ``plan.train/agg_w/recv/rejoin``; training
+   clients' fresh uploads supersede their pending payloads, stragglers
+   retransmit the buffered one.
+3. ``charged = tracker.end_round(plan, fresh_bits)`` — updates the buffer
+   bookkeeping (fresh-but-undelivered payloads go pending at staleness 0;
+   delivered or crash-dropped ones clear) and returns the per-client bit
+   charge: fresh encode bits for training clients, the STORED encode bits
+   for retransmitters (the payload on the air is the buffered one).
+
+Silent clients (nothing on the air) are excluded from the round's channel
+reports entirely — no bytes, no delay, no energy.
+
+Under normalization the global ``α`` cancels out of
+``fedavg_stacked``/``masked_fedavg_stacked`` (both divide by the weight
+sum), so only the RELATIVE ``(1+s)^(-a)`` discount between fresh and stale
+payloads matters; ``α`` is kept for parity with
+``core/async_agg.StalenessWeightedAggregator`` and for the all-outage gate
+semantics (``α > 0`` never flips the ``Σw > 0`` gate).
+
+With the zero-fault plan every client trains and transmits every round, so
+pending payloads are always superseded before they could retransmit,
+staleness is identically zero, and ``agg_w`` equals the plain channel
+outage weights — the robust round is then bitwise the synchronous round
+for ANY ``max_staleness``.  ``max_staleness=0`` additionally makes the
+robust engine drop failed uploads exactly like the synchronous engine even
+under faults (a pending payload ages to 1 > 0 before its first retransmit
+chance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.wireless.faults import RoundFaults
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessConfig:
+    """Bounded-staleness aggregation knobs (FedAsync-style discounting).
+
+    ``alpha``: global merge weight α (cancels under weight normalization —
+    see module docstring).  ``a``: staleness exponent; 0 disables
+    discounting (stale payloads merge at full weight).  ``max_staleness``:
+    pending payloads older than this many rounds are dropped, not merged;
+    0 reproduces the synchronous engine's drop-on-failure semantics."""
+    alpha: float = 1.0
+    a: float = 0.0
+    max_staleness: int = 0
+
+    def discount(self, staleness: np.ndarray) -> np.ndarray:
+        return (self.alpha
+                * (1.0 + staleness.astype(np.float64)) ** (-self.a)
+                ).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """One round's resolved schedule (all (n_clients,) arrays)."""
+    train: np.ndarray      # float32 — client runs local steps
+    recv: np.ndarray       # float32 — client receives the broadcast
+    rejoin: np.ndarray     # float32 — crash rejoin (opt state reset)
+    attempt: np.ndarray    # float32 — a payload goes on the air
+    delivered: np.ndarray  # float32 — attempt survived the channel
+    staleness: np.ndarray  # int64   — age of the payload on the air
+    agg_w: np.ndarray      # float32 — delivered · α·(1+s)^(-a)
+
+
+class StalenessTracker:
+    """Pending-payload bookkeeping + staleness-discounted weight vector.
+
+    Tracks, per client: whether the pending buffer holds a real payload
+    (``valid``), how many rounds old it is (``age``), and the encoded bit
+    size it was produced at (``bits`` — what a retransmission charges).
+    The payload *contents* live device-side in the engine's pending buffer
+    (or the legacy loop's per-client list); the tracker only ever sees
+    masks and sizes, which is why both paths can share one instance."""
+
+    def __init__(self, n_clients: int, cfg: Optional[StalenessConfig] = None):
+        self.cfg = cfg or StalenessConfig()
+        self.valid = np.zeros(n_clients, bool)
+        self.age = np.zeros(n_clients, np.int64)
+        self.bits = np.zeros(n_clients, np.float64)
+
+    def begin_round(self, faults: RoundFaults,
+                    outage_w: np.ndarray) -> RoundPlan:
+        """Resolve the round schedule from the fault masks and the realized
+        channel outage weights (1.0 delivered / 0.0 outage per client)."""
+        # payloads produced in an earlier round are one round staler now;
+        # anything beyond the staleness bound is abandoned
+        self.age[self.valid] += 1
+        self.valid &= self.age <= self.cfg.max_staleness
+        train = faults.train > 0
+        has_payload = train | self.valid        # fresh upload or buffered
+        attempt = (faults.tx > 0) & has_payload
+        delivered = attempt & (np.asarray(outage_w) > 0)
+        staleness = np.where(train, 0, self.age)
+        agg_w = np.where(delivered, self.cfg.discount(staleness), 0.0)
+        return RoundPlan(
+            train=train.astype(np.float32), recv=faults.recv.copy(),
+            rejoin=faults.rejoin.copy(), attempt=attempt.astype(np.float32),
+            delivered=delivered.astype(np.float32),
+            staleness=staleness.astype(np.int64),
+            agg_w=agg_w.astype(np.float32))
+
+    def end_round(self, plan: RoundPlan,
+                  fresh_bits: np.ndarray) -> np.ndarray:
+        """Advance the buffer bookkeeping after the round body ran; returns
+        the per-client uplink bit charge (0 for silent clients).
+        ``fresh_bits`` is the round's encoded payload size per client (only
+        read for clients that trained)."""
+        train = plan.train > 0
+        delivered = plan.delivered > 0
+        charged = np.where(plan.attempt > 0,
+                           np.where(train, fresh_bits, self.bits), 0.0)
+        # training clients overwrite their pending slot with the fresh
+        # payload (staleness 0); it clears if it was delivered this round
+        self.bits = np.where(train, fresh_bits, self.bits)
+        self.age = np.where(train, 0, self.age)
+        self.valid = np.where(train, ~delivered, self.valid & ~delivered)
+        self.valid &= ~(plan.rejoin > 0)        # crash drops the buffer
+        return charged
+
+    # ---- checkpoint/resume ------------------------------------------------
+
+    def state_dict(self) -> Dict:
+        return {"valid": self.valid.astype(np.int64).tolist(),
+                "age": self.age.tolist(), "bits": self.bits.tolist()}
+
+    def load_state_dict(self, d: Dict) -> None:
+        self.valid = np.asarray(d["valid"], np.int64).astype(bool)
+        self.age = np.asarray(d["age"], np.int64)
+        self.bits = np.asarray(d["bits"], np.float64)

@@ -51,12 +51,28 @@ def main():
     ap.add_argument("--factored-agg", action="store_true",
                     help="aggregate LoRA factor pairs via SVD re-projection "
                          "of the weighted-mean update (never densified)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="inject wireless faults into the FL run: 'k=v,...' "
+                         "(dropout_p/straggle_p/crash_p/snr_dip_p/seed/...) "
+                         "or a JSON file path (wireless.faults.FaultPlan)")
+    ap.add_argument("--staleness-a", type=float, default=0.0,
+                    help="staleness discount exponent: late uploads merge "
+                         "with weight α·(1+s)^(-a)")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="retransmit failed uploads for up to this many "
+                         "rounds (0 = synchronous drop-on-failure)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="FL engine: save the stacked round state each round "
+                         "here so a killed run can --resume")
+    ap.add_argument("--resume", action="store_true",
+                    help="FL engine: restart from --ckpt-dir's last round")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
     if args.fl_clients:
         from repro.core.pftt import PFTTConfig, run_pftt
+        from repro.wireless import FaultPlan
         print(f"federated cohort demo (PFTT reduced-roberta workload; "
               f"--arch/--steps/--seq ignored) on {n_dev} device(s)")
         mesh = jax.make_mesh((n_dev,), ("data",))
@@ -65,6 +81,10 @@ def main():
                          pretrain_steps=50, samples_per_client=200,
                          uplink_codec=args.uplink_codec,
                          factored_agg=args.factored_agg,
+                         fault_plan=FaultPlan.from_spec(args.fault_plan),
+                         staleness_a=args.staleness_a,
+                         max_staleness=args.max_staleness,
+                         ckpt_dir=args.ckpt_dir, resume=args.resume,
                          verbose=True)
         res = run_pftt(cfg, mesh=mesh, client_axes=("data",))
         print(f"sharded cohort over {n_dev} device(s): final acc "

@@ -99,10 +99,15 @@ class CohortSharding:
                                                    self.n_clients)
         return per_client + [per_client[0]] * self.n_pad
 
+    def pad_vec(self, values, fill: float = 0.0) -> np.ndarray:
+        """Append ``fill`` entries for every ghost client (fault masks pad
+        with 1.0 so ghosts keep training/receiving like the sync engine)."""
+        v = np.asarray(values, np.float32)
+        return np.concatenate([v, np.full((self.n_pad,), fill, np.float32)])
+
     def pad_weights(self, weights) -> np.ndarray:
         """Append zero aggregation weight for every ghost client."""
-        w = np.asarray(weights, np.float32)
-        return np.concatenate([w, np.zeros((self.n_pad,), np.float32)])
+        return self.pad_vec(weights, 0.0)
 
 
 def cohort_sharding(mesh: Mesh, n_clients: int,

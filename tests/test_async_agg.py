@@ -32,6 +32,41 @@ def test_async_converges_to_target():
     assert abs(float(agg.global_tree["w"][0]) - 2.0) < 1e-3
 
 
+def test_async_merge_is_permutation_invariant():
+    """Same round's arrivals must merge identically regardless of submit
+    order (the old sequential pairwise merge gave later submissions more
+    influence)."""
+    updates = [({"w": jnp.ones(3) * v}, r)
+               for v, r in [(1.0, 0), (5.0, 2), (-2.0, 3)]]
+    outs = []
+    for perm in ([0, 1, 2], [2, 1, 0], [1, 2, 0]):
+        agg = StalenessWeightedAggregator(
+            global_tree={"w": jnp.zeros(3)}, alpha=0.5, a=0.7, round=4)
+        for i in perm:
+            agg.submit(*updates[i])
+        outs.append(np.asarray(agg.step()["w"]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_async_single_update_matches_pairwise_merge():
+    g = {"w": jnp.zeros(2)}
+    agg = StalenessWeightedAggregator(global_tree=g, alpha=0.6, a=0.5,
+                                      round=3)
+    agg.submit({"w": jnp.ones(2)}, produced_round=1)
+    w = 0.6 * (1.0 + 2) ** (-0.5)
+    np.testing.assert_allclose(np.asarray(agg.step()["w"]),
+                               np.full(2, w), rtol=1e-6)
+
+
+def test_quantized_bytes_skips_none_leaves():
+    """Leaves that don't ship (``None`` — e.g. a frozen subtree hole) must
+    not be charged a scale on the wire."""
+    q = {"a": np.zeros(10, np.int8), "b": None}
+    assert quantized_bytes(q) == 10 + 4          # one payload + ONE scale
+    assert quantized_bytes({"b": None}) == 0     # nothing ships, zero bytes
+
+
 def test_fair_selector_serves_everyone():
     rng = np.random.RandomState(0)
     sel = FairSelector(n_clients=8)
