@@ -36,22 +36,38 @@ from repro.optim import adamw
 from repro.sharding import MeshCtx
 
 
-def _build_workload(n_clients: int, *, d_model=128, seq_len=16, batch=2,
-                    local_steps=3, rank=8, seed=0):
-    mcfg = get_config("roberta-base").reduced(d_model=d_model, repeats=2)
+# non-dense mixer families: same factored-vs-merged contrast through the
+# MLA low-rank projections and the Mamba in/out projections (LM loss — these
+# backbones have no cls head)
+ARCH_ROWS = (
+    ("deepseek-v2-236b",
+     ("mixer/wq_a", "mixer/wq_b", "mixer/wkv_a", "mixer/wkv_b")),
+    ("mamba2-1.3b", ("mixer/in_proj", "mixer/out_proj")),
+)
+
+
+def _build_workload(n_clients: int, *, arch="roberta-base", targets=None,
+                    d_model=128, seq_len=16, batch=2, local_steps=3, rank=8,
+                    seed=0):
+    mcfg = get_config(arch).reduced(d_model=d_model, repeats=2)
     model = Model(mcfg, meshctx=MeshCtx.single_device())
     key = jax.random.PRNGKey(seed)
-    params = model.init(key)
+    params = model.init(key, max_seq=seq_len)
     peft_cfg = peft_mod.PEFTConfig(
         lora_rank=rank,
-        lora_targets=("mixer/wq", "mixer/wk", "mixer/wv", "mixer/wo"))
+        lora_targets=targets
+        or ("mixer/wq", "mixer/wk", "mixer/wv", "mixer/wo"))
     scale = peft_mod.lora_scale(peft_cfg)
     opt = adamw(1e-3, update_mask=lambda p: not p.endswith("/mask"))
+    cls = mcfg.n_classes > 0 if hasattr(mcfg, "n_classes") else False
+
+    def _loss(p, b, **kw):
+        return model.cls_loss(p, b, **kw)[0] if cls \
+            else model.lm_loss(p, b, **kw)
 
     def local_step_factored(tr, op, b):
         def loss_fn(t):
-            return model.cls_loss(params, b, lora=t["lora"],
-                                  lora_scale=scale)[0]
+            return _loss(params, b, lora=t["lora"], lora_scale=scale)
         loss, g = jax.value_and_grad(loss_fn)(tr)
         upd, op = opt.update(g, op, tr)
         return trees.tree_add(tr, upd), op, loss
@@ -59,7 +75,7 @@ def _build_workload(n_clients: int, *, d_model=128, seq_len=16, batch=2,
     def local_step_merged(tr, op, b):
         def loss_fn(t):
             eff = peft_mod.apply_lora(params, t["lora"], peft_cfg)
-            return model.cls_loss(eff, b)[0]
+            return _loss(eff, b)
         loss, g = jax.value_and_grad(loss_fn)(tr)
         upd, op = opt.update(g, op, tr)
         return trees.tree_add(tr, upd), op, loss
@@ -69,12 +85,20 @@ def _build_workload(n_clients: int, *, d_model=128, seq_len=16, batch=2,
     st_tr = trees.stack([tr] * n_clients)
     st_op = trees.stack([opt.init(tr)] * n_clients)
     rng = np.random.RandomState(seed)
-    batches = {
-        "tokens": jnp.asarray(rng.randint(
-            0, mcfg.vocab_size, (n_clients, local_steps, batch, seq_len)),
-            jnp.int32),
-        "label": jnp.asarray(rng.randint(
-            0, mcfg.n_classes, (n_clients, local_steps, batch)), jnp.int32)}
+    toks = rng.randint(6, mcfg.vocab_size,
+                       (n_clients, local_steps, batch, seq_len))
+    if cls:
+        batches = {
+            "tokens": jnp.asarray(toks, jnp.int32),
+            "label": jnp.asarray(rng.randint(
+                0, mcfg.n_classes, (n_clients, local_steps, batch)),
+                jnp.int32)}
+    else:
+        batches = {
+            "tokens": jnp.asarray(toks, jnp.int32),
+            "labels": jnp.asarray(np.roll(toks, -1, axis=-1), jnp.int32),
+            "mask": jnp.ones((n_clients, local_steps, batch, seq_len),
+                             jnp.float32)}
     weights = jnp.ones((n_clients,))
     return {"factored": local_step_factored, "merged": local_step_merged}, \
         st_tr, st_op, batches, weights
@@ -154,6 +178,27 @@ def main(quick: bool = True, out: str = "BENCH_lora_path.json",
             max(row["factored"]["ms_per_round"], 1e-9)
         results.append(row)
         print(f"lora_path_factored_n{n},"
+              f"{row['factored']['ms_per_round'] * 1e3:.1f},"
+              f"merged={row['merged']['ms_per_round']:.1f}ms "
+              f"peak {row['merged']['peak_bytes']:,}->"
+              f"{row['factored']['peak_bytes']:,}B "
+              f"(x{row['mem_ratio']:.2f}) speedup={row['speedup']:.2f}x")
+    # non-dense mixer families at a fixed cohort: the factored win through
+    # MLA's four low-rank projections and Mamba's in/out projections
+    n_arch = 8
+    for arch, targets in ARCH_ROWS:
+        steps, st_tr, st_op, batches, weights = _build_workload(
+            n_arch, arch=arch, targets=targets, d_model=64)
+        row = {"arch": arch, "n_clients": n_arch, "lora_targets": list(targets)}
+        for name, ls in steps.items():
+            row[name] = _bench_path(ls, st_tr, st_op, batches, weights,
+                                    rounds)
+        row["mem_ratio"] = row["merged"]["peak_bytes"] / \
+            max(row["factored"]["peak_bytes"], 1)
+        row["speedup"] = row["merged"]["ms_per_round"] / \
+            max(row["factored"]["ms_per_round"], 1e-9)
+        results.append(row)
+        print(f"lora_path_{arch}_n{n_arch},"
               f"{row['factored']['ms_per_round'] * 1e3:.1f},"
               f"merged={row['merged']['ms_per_round']:.1f}ms "
               f"peak {row['merged']['peak_bytes']:,}->"

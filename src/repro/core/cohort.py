@@ -105,6 +105,16 @@ class HostBatchStacker:
     then shipped with a single ``jax.device_put`` call per round (one
     transfer per leaf, no per-(client, step) ``np.stack`` garbage).
 
+    Ragged cohorts (clients with unequal per-step batch shapes) are padded
+    to the per-leaf maximum and get an extra ``"valid"`` leaf — a
+    (n_clients, local_steps, max_batch) float mask with 1.0 on real sample
+    rows (every leaf's axis 0 is the sample axis) — so unequal cohorts
+    still compile to ONE fused round step.  The loss must weight samples by
+    ``batch["valid"]`` (``Model.cls_loss`` does); padded rows then
+    contribute exactly zero to loss, gradients, and aggregation, so parity
+    with the legacy per-client loop holds.  Uniform cohorts are unchanged:
+    no ``"valid"`` leaf, bitwise-identical buffers.
+
     ``sharding`` (a client-axis ``NamedSharding``, e.g.
     ``CohortSharding.named``): each device receives ONLY its own client
     shard of the host buffer — per-shard slices instead of one replicated
@@ -112,19 +122,73 @@ class HostBatchStacker:
 
     def __init__(self, sharding: Optional[NamedSharding] = None):
         self._bufs = None
+        self._ragged = False
         self._sharding = sharding
+
+    def _scan_shapes(self, per_client_batches):
+        first = per_client_batches[0][0]
+        shapes = {k: np.shape(v) for k, v in first.items()}
+        ragged = False
+        for cb in per_client_batches:
+            for step in cb:
+                for k, v in step.items():
+                    if np.shape(v) != shapes[k]:
+                        ragged = True
+                        shapes[k] = tuple(max(a, b) for a, b in
+                                          zip(shapes[k], np.shape(v)))
+        return shapes, ragged
+
+    def _alloc(self, per_client_batches, nc, ns):
+        first = per_client_batches[0][0]
+        shapes, ragged = self._scan_shapes(per_client_batches)
+        self._ragged = ragged
+        alloc = np.zeros if ragged else np.empty   # pad region stays defined
+        self._bufs = {k: alloc((nc, ns) + shapes[k],
+                               np.asarray(first[k]).dtype) for k in first}
+        if ragged:
+            max_b = shapes[next(iter(first))][0]
+            self._bufs["valid"] = np.zeros((nc, ns, max_b), np.float32)
+
+    def _compatible(self, per_client_batches, nc, ns):
+        """Reusable iff the buffer's (nc, ns) layout matches and every leaf
+        still fits: exactly (uniform) or within the padded max (ragged)."""
+        ref = {k: v for k, v in self._bufs.items() if k != "valid"}
+        if any(v.shape[:2] != (nc, ns) for v in ref.values()):
+            return False
+        shapes, ragged = self._scan_shapes(per_client_batches)
+        if set(shapes) != set(ref):
+            return False
+        if not self._ragged:
+            return not ragged and all(ref[k].shape[2:] == s
+                                      for k, s in shapes.items())
+        return all(all(d <= bd for d, bd in zip(s, ref[k].shape[2:]))
+                   for k, s in shapes.items())
 
     def __call__(self, per_client_batches):
         nc = len(per_client_batches)
         ns = len(per_client_batches[0])
-        if self._bufs is None:
-            self._bufs = {
-                k: np.empty((nc, ns) + np.shape(v), np.asarray(v).dtype)
-                for k, v in per_client_batches[0][0].items()}
-        for ci, cb in enumerate(per_client_batches):
-            for si, step in enumerate(cb):
-                for k, v in step.items():
-                    self._bufs[k][ci, si] = v
+        if self._bufs is None or not self._compatible(per_client_batches,
+                                                      nc, ns):
+            # cohorts whose shapes drift (uniform → ragged, a new max batch)
+            # pay one realloc; steady-state rounds reuse the buffer
+            self._alloc(per_client_batches, nc, ns)
+        if self._ragged:
+            valid = self._bufs["valid"]
+            valid[:] = 0.0
+            for ci, cb in enumerate(per_client_batches):
+                for si, step in enumerate(cb):
+                    n = None
+                    for k, v in step.items():
+                        v = np.asarray(v)
+                        n = v.shape[0] if n is None else n
+                        sl = (ci, si) + tuple(slice(0, d) for d in v.shape)
+                        self._bufs[k][sl] = v
+                    valid[ci, si, :n] = 1.0
+        else:
+            for ci, cb in enumerate(per_client_batches):
+                for si, step in enumerate(cb):
+                    for k, v in step.items():
+                        self._bufs[k][ci, si] = v
         if self._sharding is None:
             return jax.device_put(self._bufs)
         return jax.device_put(self._bufs, self._sharding)

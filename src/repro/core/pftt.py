@@ -17,8 +17,10 @@ Execution goes through the vmapped cohort engine (``core/cohort.py``): one
 fused jitted round step (vmap over clients of a scan over local steps +
 stacked aggregation + broadcast) instead of O(n_clients × local_steps)
 dispatches.  ``PFTTConfig(engine=False)`` keeps the legacy per-client loop
-(parity oracle + benchmark baseline); ragged cohorts (clients with unequal
-batch shapes) fall back to it automatically.
+(parity oracle + benchmark baseline).  Ragged cohorts (clients with unequal
+batch shapes) are padded and validity-masked by the ``HostBatchStacker``
+(the ``"valid"`` sample weights ride the stacked batch into ``cls_loss``),
+so they compile to the same single fused step — no legacy fallback.
 
 LoRA executes FACTORED by default (``peft.lora_proj``): the loss threads
 the rank-r factor tree next to the params, so under the client-vmap the
@@ -183,7 +185,8 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
     """``mesh`` (optional ``jax.sharding.Mesh``): shard the fused cohort
     round across it — see the module docstring.  ``client_axes`` overrides
     which mesh axes carry the client dim (default: every non-"model" axis).
-    Ragged cohorts fall back to the legacy loop and ignore the mesh."""
+    Ragged cohorts run the same fused (and sharded) round via
+    pad-and-mask."""
     assert cfg.method in METHODS, cfg.method
     rng = np.random.RandomState(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
@@ -279,11 +282,12 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
 
     local_step_jit = jax.jit(local_step)     # legacy per-client path
 
-    # uniform batch shapes → one fused round step; ragged cohorts keep the
-    # legacy per-client loop (vmap needs a common stacked shape).  The
-    # sharded engine (mesh=) only applies on the fused path: ghost-pad the
-    # cohort to a multiple of the shard count, zero aggregation weight.
-    use_engine = cfg.engine and len(set(client_batch_sizes)) == 1
+    # ragged cohorts (unequal client batch sizes) pad-and-mask inside the
+    # HostBatchStacker ("valid" sample weights → cls_loss weighted mean), so
+    # EVERY cohort compiles to one fused round step.  The sharded engine
+    # (mesh=) ghost-pads the cohort to a multiple of the shard count with
+    # zero aggregation weight.
+    use_engine = cfg.engine
     cs = cohort_sharding(mesh, cfg.n_clients, client_axes) \
         if (mesh is not None and use_engine) else None
     n_rows = cs.total if cs is not None else cfg.n_clients
@@ -590,4 +594,6 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         "total_energy_j": ledger.total_energy_j,
         "uplink_codec": cfg.uplink_codec,
         "eval_dispatches_per_round": eval_dispatches[0] / max(cfg.rounds, 1),
+        "fused_engine": bool(use_engine),
+        "ragged_cohort": len(set(client_batch_sizes)) > 1,
     }

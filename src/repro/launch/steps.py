@@ -89,17 +89,24 @@ def make_peft_step(model: Model, peft_cfg: peft_mod.PEFTConfig,
 
 
 def make_prefill_step(model: Model, cache_len: int,
-                      impl: Optional[str] = None):
-    def prefill_step(params, batch):
+                      impl: Optional[str] = None, lora_scale: float = 1.0):
+    """``prefill_step(params, batch, lora=None)``: the optional LoRA factor
+    tree rides the factored side channel through prefill (never merged)."""
+    def prefill_step(params, batch, lora=None):
         return model.prefill(params, batch["tokens"], cache_len,
                              frames=batch.get("frames"),
-                             patches=batch.get("patches"), impl=impl)
+                             patches=batch.get("patches"), impl=impl,
+                             lora=lora, lora_scale=lora_scale)
     return prefill_step
 
 
-def make_serve_step(model: Model, impl: Optional[str] = None):
-    def serve_step(params, cache, tokens):
-        return model.decode_step(params, cache, tokens, impl=impl)
+def make_serve_step(model: Model, impl: Optional[str] = None,
+                    lora_scale: float = 1.0):
+    """``serve_step(params, cache, tokens, lora=None)``: factored decode —
+    per-client LoRA factors stay rank-r through the cached step."""
+    def serve_step(params, cache, tokens, lora=None):
+        return model.decode_step(params, cache, tokens, impl=impl,
+                                 lora=lora, lora_scale=lora_scale)
     return serve_step
 
 

@@ -6,13 +6,23 @@ TPU pod in production — the same pjit program the dry-run compiles).
 
 ``--fl-clients N`` instead runs the federated cohort engine with the
 stacked client axis sharded over every available device (``shard_map``
-round, psum aggregation — core/cohort.py).  The FL workload is PFTT's
-reduced-roberta cohort (fixed backbone: ``--arch``/``--steps``/``--seq``
-don't apply; ``--batch``/``--lr``/``--fl-rounds`` do):
+round, psum aggregation — core/cohort.py).  ``--arch roberta-base`` runs
+PFTT's reduced-roberta classification cohort (``--steps``/``--seq`` don't
+apply; ``--batch``/``--lr``/``--fl-rounds`` do):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.train --arch roberta-base --fl-clients 8 \
         --fl-rounds 3
+
+Any other ``--arch`` runs the universal fused round on that architecture
+(``core/arch_round.py``): a ragged LoRA cohort trained through ONE fused
+dispatch per round with the frozen base replicated and only the rank-r
+factors batched.  ``--assert-fused`` turns the run into the CI arch-matrix
+check — it fails unless zero dense merges were traced, each round was one
+dispatch, and the losses match the legacy dense-merge oracle to ≤1e-5:
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-v2-236b \
+        --fl-clients 4 --fl-rounds 2 --assert-fused
 """
 import argparse
 import time
@@ -66,15 +76,51 @@ def main():
                          "here so a killed run can --resume")
     ap.add_argument("--resume", action="store_true",
                     help="FL engine: restart from --ckpt-dir's last round")
+    ap.add_argument("--assert-fused", action="store_true",
+                    help="FL engine: fail unless the run took the fused "
+                         "factored path — zero dense merges, one dispatch "
+                         "per round, and (non-roberta archs) ≤1e-5 parity "
+                         "vs the legacy dense-merge oracle")
+    ap.add_argument("--fl-seq", type=int, default=16,
+                    help="arch FL round: per-sample sequence length")
+    ap.add_argument("--fl-dmodel", type=int, default=64,
+                    help="arch FL round: reduced-config width")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
+    if args.fl_clients and args.arch != "roberta-base":
+        from repro.core.arch_round import ArchRoundConfig, run_arch_round
+        print(f"universal fused round: --arch {args.arch}, "
+              f"{args.fl_clients} clients on {n_dev} device(s)")
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        cfg = ArchRoundConfig(arch=args.arch, n_clients=args.fl_clients,
+                              rounds=args.fl_rounds,
+                              batch=min(args.batch, 4), seq_len=args.fl_seq,
+                              d_model=args.fl_dmodel, lr=args.lr,
+                              oracle=args.assert_fused)
+        res = run_arch_round(cfg, mesh=mesh, client_axes=("data",))
+        print(f"arch={res['arch']} targets={res['lora_targets']} "
+              f"ragged={res['ragged']} ghosts={res['n_ghosts']} "
+              f"dispatches/round={res['dispatches_per_round']} "
+              f"dense_merges={res['dense_merges_in_engine']} "
+              f"loss/round={['%.4f' % l for l in res['loss_per_round']]}")
+        if args.assert_fused:
+            err = res["oracle_loss_max_err"]
+            print(f"oracle parity max err {err:.2e}")
+            assert res["dense_merges_in_engine"] == 0, \
+                "dense-merge fallback taken inside the fused round"
+            assert res["dispatches_per_round"] == 1.0, \
+                "cohort fell back to per-client dispatch"
+            assert err <= 1e-5, f"factored/oracle divergence {err:.2e}"
+            print("fused path asserted: factored, one dispatch, "
+                  "oracle parity OK")
+        return
     if args.fl_clients:
         from repro.core.pftt import PFTTConfig, run_pftt
         from repro.wireless import FaultPlan
         print(f"federated cohort demo (PFTT reduced-roberta workload; "
-              f"--arch/--steps/--seq ignored) on {n_dev} device(s)")
+              f"--steps/--seq ignored) on {n_dev} device(s)")
         mesh = jax.make_mesh((n_dev,), ("data",))
         cfg = PFTTConfig(n_clients=args.fl_clients, rounds=args.fl_rounds,
                          batch=args.batch, lr=args.lr, local_steps=5,
@@ -93,6 +139,9 @@ def main():
               f"(codec={args.uplink_codec}) mean round delay "
               f"{res['mean_round_delay_s']:.3f}s energy "
               f"{res['total_energy_j']:.2f}J")
+        if args.assert_fused:
+            assert res["fused_engine"], "PFTT ran the legacy per-client loop"
+            print("fused path asserted: engine round")
         return
     d = args.data_axis or n_dev
     mesh = jax.make_mesh((d, n_dev // d), ("data", "model"))

@@ -23,7 +23,7 @@ from repro.models import ssm as ssm_mod
 from repro.models.mlp import init_mlp, mlp
 from repro.models.moe import init_moe, moe_ffn, moe_ffn_a2a
 from repro.models.norms import apply_norm
-from repro.models.peft import LoraProj, merge_factors
+from repro.models.peft import LoraProj, has_factors, merge_factors
 from repro.models.rope import apply_rope
 from repro.sharding import MeshCtx
 
@@ -58,6 +58,12 @@ def _proj(x, w, lf, ctx: LayerCtx):
     along, plain matmul otherwise."""
     return LoraProj(w, lf, ctx.lora_scale,
                     ctx.opts.get("lora_backend", "jnp"))(x)
+
+
+def _lkw(ctx: LayerCtx, mf):
+    """Factored side-channel kwargs for mla/ssm entry points."""
+    return dict(lora=mf, scale=ctx.lora_scale,
+                backend=ctx.opts.get("lora_backend", "jnp"))
 
 
 # ---------------------------------------------------------------------------
@@ -187,29 +193,33 @@ def apply_layer_seq(x, lp, kind: LayerKind, ctx: LayerCtx, lora=None):
             cache_entry["xk"] = kx
             cache_entry["xv"] = vx
     elif kind.mixer == "mla":
-        # mla/mamba internals don't take factors: dense-merge THIS layer's
-        # mixer factors locally (2-D leaves, post-scan) as a fallback
-        mp = merge_factors(lp["mixer"], _sub(lora, "mixer"), ctx.lora_scale)
+        # factored path: mla takes the lora side channel directly — the
+        # frozen base is never re-materialized under the client vmap
+        mf = _sub(lora, "mixer")
         impl = ctx.impl if ctx.impl != "auto" else (
             "dense" if x.shape[1] <= 2048 else "chunked")
         y, (ckv, kpe) = mla_mod.mla_seq(
-            xn, mp, cfg.mla, cfg.n_heads, ctx.positions,
+            xn, lp["mixer"], cfg.mla, cfg.n_heads, ctx.positions,
             cfg.rope_theta, cfg.norm_eps, causal=ctx.causal, impl=impl,
             sparse_cfg=cfg.sparse_attn, q_offset=ctx.q_offset,
-            causal_skip=ctx.opts.get("causal_skip", False))
+            causal_skip=ctx.opts.get("causal_skip", False),
+            **_lkw(ctx, mf))
         x = x + y
         cache_entry = {"ckv": ckv, "kpe": kpe}
     elif kind.mixer == "mamba":
-        mp = merge_factors(lp["mixer"], _sub(lora, "mixer"), ctx.lora_scale)
+        mf = _sub(lora, "mixer")
         if (ctx.opts.get("mamba_sp") and ctx.mode == "train"
-                and ctx.meshctx is not None):
-            # sequence-parallel SSD: activations stay seq-sharded (§Perf B2)
-            x = x + ssm_mod.mamba_seq_sp(xn, mp, cfg.ssm,
+                and ctx.meshctx is not None and not has_factors(mf)):
+            # sequence-parallel SSD: activations stay seq-sharded (§Perf B2);
+            # its shard_map replicates raw weights, so factored layers route
+            # through the plain factored mamba_seq below instead
+            x = x + ssm_mod.mamba_seq_sp(xn, lp["mixer"], cfg.ssm,
                                          cfg.d_model, cfg.norm_eps,
                                          ctx.meshctx)
         else:
             y, (h_final, conv_state) = ssm_mod.mamba_seq(
-                xn, mp, cfg.ssm, cfg.d_model, cfg.norm_eps)
+                xn, lp["mixer"], cfg.ssm, cfg.d_model, cfg.norm_eps,
+                **_lkw(ctx, mf))
             x = x + y
             cache_entry = {"h": h_final, "conv": conv_state}
 
@@ -308,23 +318,23 @@ def apply_layer_decode(x, lp, kind: LayerKind, cache, ctx: LayerCtx,
             x = x + _proj(yx.reshape(x.shape[0], 1, -1), lp["cross"]["wo"],
                           _sub(cf, "wo"), ctx)
     elif kind.mixer == "mla":
-        mp = merge_factors(lp["mixer"], _sub(lora, "mixer"), ctx.lora_scale)
+        mf = _sub(lora, "mixer")
         c_kv, k_pe = mla_mod._compress_kv(
-            xn, mp, cfg.mla, jnp.full((x.shape[0], 1), pos),
-            cfg.rope_theta, cfg.norm_eps)
+            xn, lp["mixer"], cfg.mla, jnp.full((x.shape[0], 1), pos),
+            cfg.rope_theta, cfg.norm_eps, **_lkw(ctx, mf))
         ckv = _cache_write(cache["ckv"], c_kv, pos)
         kpe = _cache_write(cache["kpe"], k_pe, pos)
         sparse = cfg.sparse_attn if ctx.impl == "sparse" else None
-        y = mla_mod.mla_decode(xn, mp, cfg.mla, cfg.n_heads, pos,
+        y = mla_mod.mla_decode(xn, lp["mixer"], cfg.mla, cfg.n_heads, pos,
                                cfg.rope_theta, cfg.norm_eps, ckv, kpe,
-                               sparse_cfg=sparse)
+                               sparse_cfg=sparse, **_lkw(ctx, mf))
         x = x + y
         new_cache = dict(cache, ckv=ckv, kpe=kpe)
     elif kind.mixer == "mamba":
-        mp = merge_factors(lp["mixer"], _sub(lora, "mixer"), ctx.lora_scale)
+        mf = _sub(lora, "mixer")
         y, (h, conv) = ssm_mod.mamba_decode(
-            xn, mp, cfg.ssm, cfg.d_model, cfg.norm_eps,
-            cache["h"], cache["conv"])
+            xn, lp["mixer"], cfg.ssm, cfg.d_model, cfg.norm_eps,
+            cache["h"], cache["conv"], **_lkw(ctx, mf))
         x = x + y
         new_cache = dict(cache, h=h, conv=conv)
 

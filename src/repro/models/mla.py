@@ -4,6 +4,22 @@ Sequence mode materializes per-head k/v from the compressed latent (fine with
 remat); decode mode uses the *absorbed* formulation — q is projected into the
 kv_lora latent space so attention runs directly against the compressed cache
 (c_kv, k_rope), which is the whole point of MLA's small KV cache.
+
+Factored-LoRA contract (the universal fused path): every entry point takes an
+optional ``lora`` side channel — a dict mirroring the param leaves with
+``{'a','b','mask'}`` factor dicts (``peft.init_lora``) on any of ``wq_a`` /
+``wq_b`` / ``wkv_a`` / ``wkv_b`` / ``wo`` — plus ``scale`` (α/r) and
+``backend``.  Targeted projections run ``peft.lora_proj``:
+
+    y = x @ W + scale · ((x @ A) @ (mask · B))
+
+so the dense (din, dout) delta is never formed and, under the cohort
+engine's client-vmap, the frozen base stays UNBATCHED while only the rank-r
+factors carry the client axis.  The one deliberate exception is absorbed
+decode: ``mla_decode`` contracts q/ctx against ``wkv_b`` itself (not
+``x @ W``), so ``wkv_b`` factors are merged into the LATENT-space weight
+(kv_lora_rank × n_heads·(nope+v) — the same order as the factor's own B,
+never a d_model² delta) via ``peft.effective_weight``.
 """
 from __future__ import annotations
 
@@ -13,7 +29,13 @@ import jax.numpy as jnp
 from repro.configs.base import MLAConfig
 from repro.models import attention as attn
 from repro.models.norms import rmsnorm
+from repro.models.peft import effective_weight, lora_proj
 from repro.models.rope import apply_rope
+
+
+def _lf(lora, key):
+    """One leaf's factor dict from the mixer side channel (None-safe)."""
+    return None if lora is None else lora.get(key)
 
 
 def init_mla(key, d_model: int, n_heads: int, cfg: MLAConfig, dtype):
@@ -36,17 +58,23 @@ def init_mla(key, d_model: int, n_heads: int, cfg: MLAConfig, dtype):
     }
 
 
-def _project_q(x, p, cfg: MLAConfig, n_heads: int, positions, rope_theta, eps):
+def _project_q(x, p, cfg: MLAConfig, n_heads: int, positions, rope_theta, eps,
+               lora=None, scale: float = 1.0, backend: str = "jnp"):
     b, s, _ = x.shape
-    cq = rmsnorm(x @ p["wq_a"], p["q_norm"]["scale"], eps)
-    q = (cq @ p["wq_b"]).reshape(b, s, n_heads, cfg.nope_head_dim + cfg.rope_head_dim)
+    cq = rmsnorm(lora_proj(x, p["wq_a"], _lf(lora, "wq_a"), scale=scale,
+                           backend=backend), p["q_norm"]["scale"], eps)
+    q = lora_proj(cq, p["wq_b"], _lf(lora, "wq_b"), scale=scale,
+                  backend=backend).reshape(
+        b, s, n_heads, cfg.nope_head_dim + cfg.rope_head_dim)
     q_nope, q_pe = q[..., :cfg.nope_head_dim], q[..., cfg.nope_head_dim:]
     q_pe = apply_rope(q_pe, positions, rope_theta)
     return q_nope, q_pe
 
 
-def _compress_kv(x, p, cfg: MLAConfig, positions, rope_theta, eps):
-    kv_a = x @ p["wkv_a"]
+def _compress_kv(x, p, cfg: MLAConfig, positions, rope_theta, eps,
+                 lora=None, scale: float = 1.0, backend: str = "jnp"):
+    kv_a = lora_proj(x, p["wkv_a"], _lf(lora, "wkv_a"), scale=scale,
+                     backend=backend)
     c_kv = rmsnorm(kv_a[..., :cfg.kv_lora_rank], p["kv_norm"]["scale"], eps)
     k_pe = apply_rope(kv_a[..., None, cfg.kv_lora_rank:], positions, rope_theta)
     return c_kv, k_pe[..., 0, :]                       # (B,S,r), (B,S,rope_hd)
@@ -54,12 +82,18 @@ def _compress_kv(x, p, cfg: MLAConfig, positions, rope_theta, eps):
 
 def mla_seq(x, p, cfg: MLAConfig, n_heads: int, positions, rope_theta: float,
             eps: float, *, causal: bool = True, impl: str = "auto",
-            sparse_cfg=None, q_offset: int = 0, causal_skip: bool = False):
-    """Full-sequence MLA (train / prefill).  Returns (y, (c_kv, k_pe))."""
+            sparse_cfg=None, q_offset: int = 0, causal_skip: bool = False,
+            lora=None, scale: float = 1.0, backend: str = "jnp"):
+    """Full-sequence MLA (train / prefill).  Returns (y, (c_kv, k_pe)).
+    ``lora``/``scale``/``backend``: the factored-LoRA side channel (module
+    docstring) — every projection stays unmerged."""
     b, s, _ = x.shape
-    q_nope, q_pe = _project_q(x, p, cfg, n_heads, positions, rope_theta, eps)
-    c_kv, k_pe = _compress_kv(x, p, cfg, positions, rope_theta, eps)
-    kv = (c_kv @ p["wkv_b"]).reshape(
+    q_nope, q_pe = _project_q(x, p, cfg, n_heads, positions, rope_theta, eps,
+                              lora=lora, scale=scale, backend=backend)
+    c_kv, k_pe = _compress_kv(x, p, cfg, positions, rope_theta, eps,
+                              lora=lora, scale=scale, backend=backend)
+    kv = lora_proj(c_kv, p["wkv_b"], _lf(lora, "wkv_b"), scale=scale,
+                   backend=backend).reshape(
         b, s, n_heads, cfg.nope_head_dim + cfg.v_head_dim)
     k_nope, v = kv[..., :cfg.nope_head_dim], kv[..., cfg.nope_head_dim:]
     k = jnp.concatenate(
@@ -75,28 +109,35 @@ def mla_seq(x, p, cfg: MLAConfig, n_heads: int, positions, rope_theta: float,
                                          q_offset=q_offset)
     else:
         y = attn.chunked_attention(q, k, v, causal=causal, q_offset=q_offset)
-    y = y.reshape(b, s, n_heads * cfg.v_head_dim) @ p["wo"]
+    y = lora_proj(y.reshape(b, s, n_heads * cfg.v_head_dim), p["wo"],
+                  _lf(lora, "wo"), scale=scale, backend=backend)
     return y, (c_kv, k_pe)
 
 
 def mla_decode(x, p, cfg: MLAConfig, n_heads: int, pos, rope_theta: float,
-               eps: float, ckv_cache, kpe_cache, *, sparse_cfg=None):
+               eps: float, ckv_cache, kpe_cache, *, sparse_cfg=None,
+               lora=None, scale: float = 1.0, backend: str = "jnp"):
     """Absorbed-MLA decode.  x: (B,1,d); caches: (B,Sc,r) / (B,Sc,rope_hd);
     ``pos``: traced scalar — index the new token was written at.
-    Caller must have already written the new (c_kv, k_pe) at ``pos``."""
+    Caller must have already written the new (c_kv, k_pe) at ``pos``.
+    ``wkv_b`` factors merge into the latent-space weight here
+    (``peft.effective_weight`` — see module docstring); q/o projections stay
+    factored."""
     b = x.shape[0]
     positions = jnp.full((b, 1), pos)
-    q_nope, q_pe = _project_q(x, p, cfg, n_heads, positions, rope_theta, eps)
+    q_nope, q_pe = _project_q(x, p, cfg, n_heads, positions, rope_theta, eps,
+                              lora=lora, scale=scale, backend=backend)
     r = cfg.kv_lora_rank
-    wkv_b = p["wkv_b"].reshape(r, n_heads, cfg.nope_head_dim + cfg.v_head_dim)
+    wkv_b = effective_weight(p["wkv_b"], _lf(lora, "wkv_b"), scale).reshape(
+        r, n_heads, cfg.nope_head_dim + cfg.v_head_dim)
     wk_b, wv_b = wkv_b[..., :cfg.nope_head_dim], wkv_b[..., cfg.nope_head_dim:]
 
     q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
                        wk_b.astype(jnp.float32))
-    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    att_scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
     logits = (jnp.einsum("bhr,btr->bht", q_abs, ckv_cache.astype(jnp.float32))
               + jnp.einsum("bhp,btp->bht", q_pe[:, 0].astype(jnp.float32),
-                           kpe_cache.astype(jnp.float32))) * scale
+                           kpe_cache.astype(jnp.float32))) * att_scale
     sc = ckv_cache.shape[1]
     slot = jnp.arange(sc)
     allowed = slot <= pos
@@ -111,5 +152,6 @@ def mla_decode(x, p, cfg: MLAConfig, n_heads: int, pos, rope_theta: float,
     probs = jax.nn.softmax(logits, axis=-1)
     ctx = jnp.einsum("bht,btr->bhr", probs, ckv_cache.astype(jnp.float32))
     v_out = jnp.einsum("bhr,rhv->bhv", ctx, wv_b.astype(jnp.float32))
-    y = v_out.reshape(b, 1, n_heads * cfg.v_head_dim).astype(x.dtype) @ p["wo"]
+    y = lora_proj(v_out.reshape(b, 1, n_heads * cfg.v_head_dim).astype(x.dtype),
+                  p["wo"], _lf(lora, "wo"), scale=scale, backend=backend)
     return y

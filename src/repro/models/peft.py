@@ -42,8 +42,9 @@ import jax.numpy as jnp
 from repro import trees
 from repro.configs.base import ModelConfig
 
-LORA_DEFAULT_TARGETS = ("mixer/wq", "mixer/wv", "mixer/wq_a", "mixer/wkv_a",
-                        "mixer/in_proj")
+LORA_DEFAULT_TARGETS = ("mixer/wq", "mixer/wv", "mixer/wq_a", "mixer/wq_b",
+                        "mixer/wkv_a", "mixer/wkv_b", "mixer/in_proj",
+                        "mixer/out_proj")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,16 +94,30 @@ def init_lora(key, params, peft: PEFTConfig) -> Dict:
     return trees.map_with_path(make, params)
 
 
+# Trace-time dense-merge accounting: every merge of a present factor leaf
+# bumps this counter, so tests and the arch-matrix launcher can assert the
+# factored hot path never fell back to materializing ``W + s·A·B`` (compile
+# caching means later identical rounds don't re-trace — a zero delta over a
+# run proves the fused program contains no merged weights).
+_DENSE_MERGE_COUNT = [0]
+
+
+def dense_merge_count() -> int:
+    """Number of factor-leaf dense merges traced so far (process-global)."""
+    return _DENSE_MERGE_COUNT[0]
+
+
 def merge_factors(params, lora, scale: float):
     """Dense-merge ``W + scale·mask·(A·B)`` over any (sub)tree pair.  The
-    merged parity oracle — and the per-layer fallback for mixers whose
-    internals don't accept factors (mla / mamba)."""
+    merged parity oracle — and the per-layer fallback for the one remaining
+    module whose internals don't accept factors (the MoE expert FFN)."""
     if lora is None:
         return params
 
     def combine(w, l):
         if l is None:
             return w
+        _DENSE_MERGE_COUNT[0] += 1
         delta = jnp.einsum("...dr,...rf->...df", l["a"], l["b"])
         return w + scale * jax.lax.stop_gradient(l["mask"]) * delta
 
@@ -137,6 +152,30 @@ def lora_scale(peft: PEFTConfig) -> float:
 def is_lora_leaf(x) -> bool:
     """is_leaf predicate for {'a','b','mask'} factor dicts (or None)."""
     return x is None or (isinstance(x, dict) and "a" in x)
+
+
+def has_factors(lf) -> bool:
+    """True if a factor (sub)tree carries any actual {'a','b'} leaf —
+    distinguishes a real side channel from the all-None mirror
+    ``init_lora`` leaves on untargeted weights."""
+    if lf is None:
+        return False
+    return any(isinstance(l, dict) and l.get("a") is not None
+               for l in jax.tree_util.tree_leaves(lf, is_leaf=is_lora_leaf))
+
+
+def effective_weight(w, lf, scale: float):
+    """Merge ONE leaf's factors into its base weight: ``W + scale·(A·(mask·
+    B))``.  Reserved for contractions that consume the weight itself rather
+    than projecting activations through it (absorbed-MLA decode contracts
+    q/ctx against ``wkv_b`` directly) — there the merged matrix lives in the
+    LATENT space (kv_lora_rank × heads·dims, the same order as the factor's
+    own B), never a d_model² delta, so it does not count as a dense-merge
+    fallback."""
+    if lf is None or lf.get("a") is None:
+        return w
+    b = lf["b"] * jax.lax.stop_gradient(lf["mask"]).astype(lf["b"].dtype)
+    return w + scale * (lf["a"] @ b)
 
 
 def lora_proj(x, w, lf, *, scale: float, backend: str = "jnp"):

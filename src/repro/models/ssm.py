@@ -5,6 +5,18 @@ term is a masked batched GEMM for the MXU; the inter-chunk recurrence is a
 short ``lax.scan`` over chunk states).  Decode mode is the O(1) recurrent
 update.  ``repro.kernels.ssd_chunk`` implements the intra-chunk GEMM as a
 Pallas kernel; this module is the jnp lowering/oracle path.
+
+Factored-LoRA contract (the universal fused path): ``mamba_seq`` and
+``mamba_decode`` take an optional ``lora`` side channel — a dict mirroring
+the param leaves with ``{'a','b','mask'}`` factor dicts (``peft.init_lora``)
+on ``in_proj`` and/or ``out_proj`` — plus ``scale`` (α/r) and ``backend``.
+Targeted projections run ``peft.lora_proj``
+(``y = x@W + scale·((x@A)@(mask·B))``) so the dense delta is never formed
+and, under the cohort engine's client vmap, the frozen base stays UNBATCHED
+while only the rank-r factors carry the client axis.  ``mamba_seq_sp`` (the
+sequence-parallel shard_map path) deliberately does NOT take factors — its
+in_specs replicate the raw weights — so ``blocks`` routes factored layers
+through ``mamba_seq`` instead (``peft.has_factors`` gate).
 """
 from __future__ import annotations
 
@@ -13,7 +25,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import SSMConfig
 from repro.models.norms import rmsnorm
+from repro.models.peft import lora_proj
 from repro.sharding import shard_map
+
+
+def _lf(lora, key):
+    """One leaf's factor dict from the mixer side channel (None-safe)."""
+    return None if lora is None else lora.get(key)
 
 
 def segsum(a):
@@ -143,13 +161,17 @@ def _split_proj(zxbcdt, d_in, g_n, h):
 
 
 def mamba_seq(x, p, cfg: SSMConfig, d_model: int, eps: float, h0=None,
-              conv0=None):
-    """Full-sequence mamba2 mixer.  Returns (y, (h_final, conv_state))."""
+              conv0=None, lora=None, scale: float = 1.0,
+              backend: str = "jnp"):
+    """Full-sequence mamba2 mixer.  Returns (y, (h_final, conv_state)).
+    ``lora``/``scale``/``backend``: factored-LoRA side channel (module
+    docstring) — in_proj/out_proj stay unmerged."""
     b, s, _ = x.shape
     d_in = cfg.expand * d_model
     h = d_in // cfg.headdim
     g_n = cfg.n_groups * cfg.state
-    zxbcdt = x @ p["in_proj"]
+    zxbcdt = lora_proj(x, p["in_proj"], _lf(lora, "in_proj"), scale=scale,
+                       backend=backend)
     z, xbc, dt_raw = _split_proj(zxbcdt, d_in, g_n, h)
     if conv0 is not None:
         xbc_ext = jnp.concatenate([conv0, xbc], axis=1)
@@ -174,17 +196,21 @@ def mamba_seq(x, p, cfg: SSMConfig, d_model: int, eps: float, h0=None,
     y = y.reshape(b, s, d_in)
     y = rmsnorm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
                 p["gate_norm"]["scale"], eps)
-    return y @ p["out_proj"], (h_final, conv_state)
+    y = lora_proj(y, p["out_proj"], _lf(lora, "out_proj"), scale=scale,
+                  backend=backend)
+    return y, (h_final, conv_state)
 
 
 def mamba_decode(x, p, cfg: SSMConfig, d_model: int, eps: float, h_state,
-                 conv_state):
+                 conv_state, lora=None, scale: float = 1.0,
+                 backend: str = "jnp"):
     """Single-token mamba2 step.  x: (B,1,d).  Returns (y, (h, conv))."""
     b = x.shape[0]
     d_in = cfg.expand * d_model
     h = d_in // cfg.headdim
     g_n = cfg.n_groups * cfg.state
-    zxbcdt = x[:, 0] @ p["in_proj"]
+    zxbcdt = lora_proj(x[:, 0], p["in_proj"], _lf(lora, "in_proj"),
+                       scale=scale, backend=backend)
     z = zxbcdt[..., :d_in]
     xbc_t = zxbcdt[..., d_in:d_in + d_in + 2 * g_n]
     dt_raw = zxbcdt[..., -h:]
@@ -206,7 +232,9 @@ def mamba_decode(x, p, cfg: SSMConfig, d_model: int, eps: float, h_state,
     y = y.reshape(b, d_in)
     y = rmsnorm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
                 p["gate_norm"]["scale"], eps)
-    return (y @ p["out_proj"])[:, None], (hnew, new_conv)
+    y = lora_proj(y, p["out_proj"], _lf(lora, "out_proj"), scale=scale,
+                  backend=backend)
+    return y[:, None], (hnew, new_conv)
 
 
 # ---------------------------------------------------------------------------

@@ -278,14 +278,23 @@ class Model:
 
     def cls_loss(self, params, batch, *, impl: Optional[str] = None,
                  lora=None, lora_scale: float = 1.0):
-        """Encoder classifier loss (PFTT / roberta).  batch: tokens, label."""
+        """Encoder classifier loss (PFTT / roberta).  batch: tokens, label,
+        and optionally ``valid`` — a (B,) sample weight the padded ragged-
+        cohort path rides in (``cohort.HostBatchStacker``): the weighted
+        mean over real rows equals the plain mean of the unpadded batch, so
+        padded rows contribute exactly zero to loss and gradients."""
         hidden, aux = self.forward(params, batch["tokens"], impl=impl,
                                    lora=lora, lora_scale=lora_scale)
         logits = (hidden[:, 0] @ params["cls_head"]).astype(jnp.float32)
         logz = jax.nn.logsumexp(logits, axis=-1)
         ll = jnp.take_along_axis(logits, batch["label"][:, None], axis=-1)[:, 0]
-        acc = (logits.argmax(-1) == batch["label"]).mean()
-        return (logz - ll).mean() + AUX_WEIGHT * aux, acc
+        correct = (logits.argmax(-1) == batch["label"]).astype(jnp.float32)
+        w = batch.get("valid")
+        if w is None:
+            return (logz - ll).mean() + AUX_WEIGHT * aux, correct.mean()
+        wsum = jnp.maximum(w.sum(), 1.0)
+        return (((logz - ll) * w).sum() / wsum + AUX_WEIGHT * aux,
+                (correct * w).sum() / wsum)
 
     def logits(self, params, hidden):
         return (hidden @ self._lm_head(params)).astype(jnp.float32)
