@@ -55,6 +55,11 @@ def _benches():
         from benchmarks import straggler_bench
         straggler_bench.main(quick=quick, out="BENCH_straggler.json")
 
+    def deadline(quick):
+        print("\n# === channel-driven deadlines: p75 cutoff vs wait-for-all ===")
+        from benchmarks import deadline_bench
+        deadline_bench.main(quick=quick, out="BENCH_deadline.json")
+
     def fig5(quick):
         print("\n# === Fig. 5: PFTT accuracy / communication ===")
         from benchmarks import fig5_pftt
@@ -77,6 +82,7 @@ def _benches():
             "cohort_shard": cohort_shard,
             "uplink": uplink,
             "straggler": straggler,
+            "deadline": deadline,
             "fig5": fig5,
             "fig4": fig4,
             "roofline": lambda quick: roofline()}

@@ -15,6 +15,9 @@ from repro import trees
 
 
 def save_checkpoint(path: str, tree) -> None:
+    """Atomic write: serialize to a sibling tmp file, then ``os.replace``.
+    A crash mid-write leaves the previous checkpoint intact (readers never
+    observe a torn .npz)."""
     flat = trees.flatten(tree)
     arrays = {}
     for k, v in flat.items():
@@ -25,7 +28,18 @@ def save_checkpoint(path: str, tree) -> None:
             a = a.astype(np.float32)
         arrays[k] = a
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **arrays)
+    final = path if path.endswith(".npz") else path + ".npz"
+    tmp = final + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
 
 
 def load_checkpoint(path: str, template):

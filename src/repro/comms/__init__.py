@@ -8,6 +8,6 @@
 from repro.comms.codec import (CODEC_NAMES, ChannelBudget,  # noqa: F401
                                CountSketchCodec, QuantCodec, TopKCodec,
                                get_codec, payload_bits_upper_bound,
-                               roundtrip)
+                               payload_checksum, roundtrip)
 from repro.comms.factored_agg import (dense_rank_r_oracle,  # noqa: F401
                                       factored_fedavg_tree, svd_reproject)

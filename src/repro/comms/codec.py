@@ -37,6 +37,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comms import quantize, sketch
 from repro.wireless.channel import ChannelReport, RayleighChannel
@@ -219,6 +220,26 @@ def payload_bits_upper_bound(codec, tree) -> float:
     return float(total)
 
 
+def payload_checksum(tree) -> int:
+    """Cheap host-side integrity checksum over an (encoded or decoded)
+    payload tree: CRC-32 folded over every leaf's raw bytes in flat-key
+    order.  The server verifies it before merging a delivery; a mismatch is
+    a NACK into the retransmission path (``core/robust.StalenessTracker``
+    with a ``DeadlineConfig`` — the seeded ``FaultPlan.corrupt_p`` mode
+    models exactly this check failing in transit)."""
+    import zlib
+
+    from repro import trees as _trees
+
+    crc = 0
+    for p, x in sorted(_trees.flatten(tree).items()):
+        if x is None:
+            continue
+        crc = zlib.crc32(p.encode(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(np.asarray(x)).tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
 @dataclasses.dataclass(frozen=True)
 class ChannelBudget:
     """Bits → wireless budget bridge: encoded payload bits become per-client
@@ -236,3 +257,29 @@ class ChannelBudget:
     def round_reports(self, bits_per_client: Sequence[float],
                       gains) -> list:
         return [self.report(b, g) for b, g in zip(bits_per_client, gains)]
+
+    def tx_seconds(self, payload_bits: float, gain: float) -> float:
+        """Airtime of ``payload_bits`` at the *realized* Rayleigh rate —
+        no outage infinity: a failed attempt still occupied the channel
+        (and burned energy) for this long.  Same ``max(rate, 1)`` floor as
+        ``RayleighChannel.uplink``."""
+        _, snr_lin = self.channel.snr(gain)
+        rate = self.channel.bandwidth_hz * np.log2(1.0 + snr_lin)
+        return float(payload_bits) / float(max(rate, 1.0))
+
+    def attempt_report(self, payload_bits: float, gain: float, *,
+                       tx_time_s: float, arrival_s: float,
+                       delivered: bool) -> ChannelReport:
+        """Per-attempt ledger entry for the continuous-time round: energy
+        is charged for the attempt's airtime whether or not the server
+        accepted it (outage, checksum NACK, deadline miss and quorum abort
+        all still transmitted), bytes only count on delivery, and the delay
+        is the scheduled arrival time within the round window."""
+        snr_db, snr_lin = self.channel.snr(gain)
+        rate = self.channel.bandwidth_hz * np.log2(1.0 + snr_lin)
+        return ChannelReport(
+            snr_db=float(snr_db), rate_bps=float(rate),
+            delay_s=float(arrival_s) if delivered else float("inf"),
+            outage=not delivered,
+            bytes_sent=float(payload_bits) / 8.0 if delivered else 0,
+            energy_j=self.tx_power_w * float(tx_time_s))

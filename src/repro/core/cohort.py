@@ -236,7 +236,7 @@ def build_supervised_round(local_step_fn: Callable,
                            *, donate: bool = True, mesh=None,
                            client_axes=None, codec=None,
                            factored_agg: bool = False,
-                           robust: bool = False):
+                           robust: bool = False, min_quorum: int = 0):
     """Fuse per-client local SGD + FedAvg + broadcast into one jitted step.
 
     ``local_step_fn(trainable, opt_state, batch) -> (trainable, opt_state,
@@ -270,9 +270,9 @@ def build_supervised_round(local_step_fn: Callable,
     a multiple of the shard count (ghost-pad via ``cohort_sharding``).
 
     ``robust``: straggler-tolerant signature — ``round_step(st_trainable,
-    st_opt, pending, batches, train_m, agg_w, recv_m, rejoin_m[, keys])``
-    → ``(st_trainable, st_opt, pending, losses[, bits])``.  ``pending`` is
-    the stacked device-side buffer of each client's latest
+    st_opt, pending, batches, train_m, agg_w, recv_m, rejoin_m, ontime_m
+    [, keys])`` → ``(st_trainable, st_opt, pending, losses[, bits])``.
+    ``pending`` is the stacked device-side buffer of each client's latest
     produced-but-unmerged upload (uploaded-subtree structure, zeros-init);
     ``train_m``/``recv_m``/``rejoin_m`` are the round's (n,) fault masks
     (``wireless.faults``) and ``agg_w`` is the host-computed
@@ -280,15 +280,22 @@ def build_supervised_round(local_step_fn: Callable,
     (``core/robust.StalenessTracker``): the server merges ``train`` clients'
     fresh uploads and stragglers' pending payloads in the same weighted
     mean, non-``recv`` clients keep their local shared values, and
-    ``rejoin`` clients get zeroed optimizer state.  All-ones masks +
-    undiscounted weights reduce bitwise to the synchronous round.
+    ``rejoin`` clients get zeroed optimizer state.  ``ontime_m`` is the
+    continuous-time deadline mask (``wireless/arrivals.py``: 1 = the
+    client's upload arrives before the server cutoff) — the body merges
+    with ``agg_w · ontime_m``, so a deadline miss keeps the payload in
+    ``pending`` at weight 0; all-ones when no deadline is configured.
+    ``min_quorum`` (static) generalizes the all-outage gate: a round with
+    fewer than ``min_quorum`` positive-weight deliveries is a no-op merge
+    (0 keeps the plain ``Σw > 0`` gate).  All-ones masks + undiscounted
+    weights reduce bitwise to the synchronous round.
     """
     pred = upload_pred or (lambda p: True)
     axes = None if mesh is None else client_shard_axes(mesh, client_axes)
     agg_fn = factored_fedavg_stacked if factored_agg else fedavg_stacked
 
     def robust_body(st_trainable, st_opt, pending, batches, train_m, agg_w,
-                    recv_m, rejoin_m, keys=None):
+                    recv_m, rejoin_m, ontime_m, keys=None):
         ref = trees.select(st_trainable, pred) if codec is not None else None
 
         def client(tr, op, client_batches):
@@ -316,12 +323,18 @@ def build_supervised_round(local_step_fn: Callable,
         # what goes on the air: a fresh upload supersedes the client's
         # pending payload; stragglers retransmit the pending one
         send = _where_clients(train_m, uploaded, pending)
+        # deadline mask: a late arrival merges at weight 0 (it stays in
+        # pending and retransmits with its staleness discount next chance)
+        agg_w = agg_w * ontime_m
         agg = agg_fn(send, agg_w, axis_names=axes)
         flat_agg = trees.flatten(agg)
         wsum = agg_w.sum()
+        n_del = (agg_w > 0).astype(jnp.float32).sum()
         if axes is not None:
             wsum = jax.lax.psum(wsum, axes)
-        gate = wsum > 0                   # nothing delivered → no-op update
+            n_del = jax.lax.psum(n_del, axes)
+        # nothing delivered (or an under-quorum cohort) → no-op update
+        gate = jnp.logical_and(wsum > 0, n_del >= min_quorum)
 
         def put(path, loc):
             if path not in flat_agg:
@@ -396,7 +409,7 @@ def build_supervised_round(local_step_fn: Callable,
         pc = P(axes)
         n_in, n_out = (5, 4) if codec is not None else (4, 3)
         if robust:
-            n_in, n_out = n_in + 4, n_out + 1
+            n_in, n_out = n_in + 5, n_out + 1
         round_step = shard_map(body, mesh=mesh,
                                in_specs=(pc,) * n_in,
                                out_specs=(pc,) * n_out, check_vma=False)
@@ -409,7 +422,7 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
                     lambda_regs=None,
                     reg_pred: Optional[Callable[[str], bool]] = None,
                     donate: bool = True, mesh=None, client_axes=None,
-                    codec=None, robust: bool = False):
+                    codec=None, robust: bool = False, min_quorum: int = 0):
     """Fuse PFIT's per-client PPO round + masked aggregation + masked
     broadcast into one jitted step.
 
@@ -440,12 +453,13 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
 
     ``robust``: straggler-tolerant signature — ``round_step(st_params,
     st_opt, global_params, pending, st_masks, prompts, keys, alphas_help,
-    alphas_safe, agg_w, train_m, recv_m, rejoin_m[, codec_keys])`` →
-    ``(st_params, st_opt, new_global, pending, mean_rewards, mean_kls
-    [, bits])``: same pending-buffer / fault-mask / discounted-weight
-    contract as the supervised builder, with the masked aggregation
-    consuming fresh uploads and retransmitted pending payloads in one
-    weighted mean and the masked broadcast gated per client on ``recv_m``.
+    alphas_safe, agg_w, train_m, recv_m, rejoin_m, ontime_m
+    [, codec_keys])`` → ``(st_params, st_opt, new_global, pending,
+    mean_rewards, mean_kls[, bits])``: same pending-buffer / fault-mask /
+    discounted-weight / deadline-mask / ``min_quorum``-gate contract as the
+    supervised builder, with the masked aggregation consuming fresh uploads
+    and retransmitted pending payloads in one weighted mean and the masked
+    broadcast gated per client on ``recv_m``.
     """
     prep, step = make_ppo_fns(model, opt, ppo_cfg, prompt_len)
     reg_pred = reg_pred or (lambda p: p.startswith("stages"))
@@ -478,7 +492,8 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
 
     def robust_ppo_body(st_params, st_opt, global_params, pending, st_masks,
                         prompts, keys, alphas_help, alphas_safe, agg_w,
-                        train_m, recv_m, rejoin_m, st_lams, codec_keys=None):
+                        train_m, recv_m, rejoin_m, ontime_m, st_lams,
+                        codec_keys=None):
         ref = st_params if codec is not None else None   # round-input params
         trained_p, trained_o, mean_rewards, mean_kls = jax.vmap(
             _make_client(global_params))(
@@ -496,15 +511,21 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
                     codec, k, t, ref=rf, bit_weights=m)
             )(codec_keys, st_params, ref, st_masks)
         # fresh upload supersedes the pending payload; stragglers/outage
-        # clients retransmit the buffered one with its staleness discount
+        # clients retransmit the buffered one with its staleness discount;
+        # a deadline miss merges at weight 0 (stays pending — see
+        # wireless/arrivals.py) and an under-quorum round is a no-op merge
         send = _where_clients(train_m, uploaded, pending)
+        agg_w = agg_w * ontime_m
         new_global = masked_fedavg_stacked(global_params, send, st_masks,
                                            agg_w, axis_names=axes)
         wsum = agg_w.sum()
+        n_del = (agg_w > 0).astype(jnp.float32).sum()
         if axes is not None:
             wsum = jax.lax.psum(wsum, axes)
-        merged = broadcast_merge_stacked(st_params, new_global, st_masks,
-                                         gate=wsum > 0)
+            n_del = jax.lax.psum(n_del, axes)
+        merged = broadcast_merge_stacked(
+            st_params, new_global, st_masks,
+            gate=jnp.logical_and(wsum > 0, n_del >= min_quorum))
         st_params = _where_clients(recv_m, merged, st_params)
         st_opt = _zero_clients(rejoin_m, st_opt)   # crash-rejoin: fresh opt
         if codec is not None:
@@ -551,10 +572,11 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
         pc, pr = P(axes), P()
         n_extra = 1 if codec is not None else 0
         if robust:
-            # pending + three fault masks + agg_w are client-sharded; the
-            # extra `send` output (the next pending buffer) likewise
+            # pending + three fault masks + agg_w + the deadline mask are
+            # client-sharded; the extra `send` output (the next pending
+            # buffer) likewise
             in_specs = ((pc, pc, pr, pc, pc, pc, pc, pc, pc, pc, pc, pc, pc,
-                         pc) + (pc,) * n_extra)
+                         pc, pc) + (pc,) * n_extra)
             out_specs = (pc, pc, pr, pc, pc, pc) + (pc,) * n_extra
         else:
             in_specs = (pc, pc, pr, pc, pc, pc, pc, pc, pc, pc) \
@@ -573,10 +595,11 @@ def build_ppo_round(model, opt, ppo_cfg: PPOConfig, prompt_len: int,
     if robust:
         def round_step(st_params, st_opt, global_params, pending, st_masks,
                        prompts, keys, alphas_help, alphas_safe, agg_w,
-                       train_m, recv_m, rejoin_m, codec_keys=None):
+                       train_m, recv_m, rejoin_m, ontime_m, codec_keys=None):
             args = (st_params, st_opt, global_params, pending, st_masks,
                     prompts, keys, alphas_help, alphas_safe, agg_w,
-                    train_m, recv_m, rejoin_m, _st_lams(alphas_help))
+                    train_m, recv_m, rejoin_m, ontime_m,
+                    _st_lams(alphas_help))
             if codec is not None:
                 args = args + (codec_keys,)
             return body(*args)

@@ -61,7 +61,8 @@ from repro.rlhf.ppo import PPOConfig, PPOTrainer
 from repro.rlhf.reward_model import RewardModel, train_reward_model
 from repro.rlhf.rollout import generate
 from repro.sharding import MeshCtx, cohort_sharding
-from repro.wireless import CommLedger, RayleighChannel, tree_bytes
+from repro.wireless import (ArrivalModel, CommLedger, DeadlineConfig,
+                            FaultPlan, RayleighChannel, tree_bytes)
 
 METHODS = ("pfit", "sfl", "pfl", "shepherd")
 
@@ -102,6 +103,9 @@ class PFITConfig:
     staleness_a: float = 0.0       # staleness exponent a in α·(1+s)^(-a)
     max_staleness: int = 0         # pending payloads older than this drop;
                                    # 0 = sync drop-on-failure semantics
+    deadline: Optional[DeadlineConfig] = None  # continuous-time round
+                                   # (wireless/arrivals.py); inert/None is
+                                   # bitwise the round-granular runtime
     ppo: PPOConfig = PPOConfig()
 
 
@@ -238,12 +242,17 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
 
     # ---- straggler-tolerant runtime: one fault trace + staleness tracker
     # shared by the engine and the legacy loop (core/robust.py)
-    robust = cfg.fault_plan is not None
-    trace = cfg.fault_plan.realize(cfg.n_clients, cfg.rounds) if robust \
-        else None
+    dl = cfg.deadline if (cfg.deadline is not None
+                          and not cfg.deadline.is_inert()) else None
+    robust = cfg.fault_plan is not None or dl is not None
+    trace = (cfg.fault_plan or FaultPlan()).realize(
+        cfg.n_clients, cfg.rounds) if robust else None
+    arrivals = ArrivalModel(channel, dl, cfg.n_clients) \
+        if dl is not None else None
     tracker = StalenessTracker(cfg.n_clients, StalenessConfig(
         alpha=cfg.staleness_alpha, a=cfg.staleness_a,
-        max_staleness=cfg.max_staleness)) if robust else None
+        max_staleness=cfg.max_staleness), deadline=dl,
+        arrivals=arrivals) if robust else None
     codec = get_codec(cfg.uplink_codec)
     codec_key = jax.random.fold_in(key, 0x0C0DEC)
     # legacy-loop codec roundtrip (the engine vmaps the same function inside
@@ -312,7 +321,10 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
             round_step = build_supervised_round(shepherd_local_step,
                                                 codec=codec,
                                                 factored_agg=cfg.factored_agg,
-                                                robust=robust, **mesh_kw)
+                                                robust=robust,
+                                                min_quorum=(dl.min_quorum
+                                                            if dl else 0),
+                                                **mesh_kw)
             cohort_tr = _shard(trees.stack(pad([cl["lora"]
                                                 for cl in clients])))
             cohort_opt = _shard(trees.stack(pad([cl["opt_state"]
@@ -324,7 +336,8 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
             ppo_round_step = build_ppo_round(
                 model, opt, cfg.ppo, cfg.prompt_len, cfg.gen_len, quality_fn,
                 lambda_regs=pad([p.lambda_reg for p in prefs]), codec=codec,
-                robust=robust, **mesh_kw)
+                robust=robust,
+                min_quorum=(dl.min_quorum if dl else 0), **mesh_kw)
             cohort_tr = _shard(trees.stack(pad([cl["params"]
                                                 for cl in clients])))
             cohort_opt = _shard(trees.stack(pad([cl["opt_state"]
@@ -350,21 +363,76 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
         return jax.device_put(cs.pad_vec(v, fill), cs.named) \
             if cs is not None else jnp.asarray(v)
 
+    # scheduling-size estimate for the continuous-time round (see
+    # wireless/arrivals.py): exact for uncompressed uploads; codec fresh
+    # uploads reserve the worst-case encoded size until the first realized
+    # size replaces it
+    est_bits = None
+    if dl is not None:
+        kind = "lora" if cfg.method == "shepherd" else "params"
+        if codec is None:
+            est_bits = np.asarray(
+                [tree_bytes(cl[kind],
+                            nonzero_mask=(client_masks[ci]
+                                          if kind == "params" else None)) * 8
+                 for ci, cl in enumerate(clients)], np.float64)
+        else:
+            est_bits = np.asarray(
+                [codec_mod.payload_bits_upper_bound(codec, cl[kind])
+                 for cl in clients], np.float64)
+
+    def _round_reports(rplan, charged, gains):
+        """Per-attempt channel reports; deadline mode charges every
+        attempt's airtime and books bytes only on delivery."""
+        if dl is None:
+            return [budget.report(charged[ci], gains[ci])
+                    for ci in range(cfg.n_clients) if rplan.attempt[ci] > 0]
+        return [budget.attempt_report(
+                    charged[ci], gains[ci],
+                    tx_time_s=float(rplan.tx_time_s[ci]),
+                    arrival_s=float(rplan.arrival_s[ci]),
+                    delivered=bool(rplan.delivered[ci] > 0))
+                for ci in range(cfg.n_clients) if rplan.attempt[ci] > 0]
+
+    def _round_extra(rplan, fresh):
+        """Ledger extras for the continuous-time round; also rolls the
+        realized encoded sizes into the next scheduling estimate."""
+        nonlocal est_bits
+        if dl is None:
+            return None
+        if codec is not None:
+            est_bits = np.where(np.asarray(rplan.train) > 0, fresh, est_bits)
+        return {"sim_dt_s": float(rplan.sim_dt_s),
+                "quorum_noop": not rplan.quorum_ok,
+                "n_delivered": int(rplan.n_delivered),
+                "corrupt": int(np.asarray(rplan.corrupt).sum())}
+
     for rnd in range(cfg.rounds):
         gains = channel.realize(cfg.n_clients)
         rplan = None
         if robust:
             rf = trace.round(rnd)
             gains = gains * rf.gain_scale       # injected SNR dips
-            rplan = tracker.begin_round(rf, channel.outage_weights(gains))
+            rplan = tracker.begin_round(rf, channel.outage_weights(gains),
+                                        gains=gains, fresh_bits=est_bits)
         rnd_key = jax.random.fold_in(codec_key, rnd)
         reports = []
+        ontime = None
+        if robust:
+            # deadline mode hands the engine the pre-deadline weights plus
+            # the on-time mask; their product (applied in the fused body)
+            # is the pre-quorum agg_w, and the body re-derives the quorum
+            # gate so engine and legacy loop agree bit-for-bit
+            ontime = rplan.ontime if dl is not None \
+                else np.ones(cfg.n_clients, np.float32)
         if use_engine:
-            w = rplan.agg_w if robust else channel.outage_weights(gains)
+            w = (rplan.agg_w_pre if dl is not None else rplan.agg_w) \
+                if robust else channel.outage_weights(gains)
             weights = jax.device_put(cs.pad_weights(w), cs.named) \
                 if cs is not None else jnp.asarray(w)
             margs = (_vec(rplan.train, 1.0), weights, _vec(rplan.recv, 1.0),
-                     _vec(rplan.rejoin, 0.0)) if robust else None
+                     _vec(rplan.rejoin, 0.0),
+                     _vec(ontime, 1.0)) if robust else None
             ck = None
             if codec is not None:
                 ck = jnp.stack(pad([jax.random.fold_in(rnd_key, ci)
@@ -419,7 +487,8 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                                          alphas_h, alphas_s, weights,
                                          _vec(rplan.train, 1.0),
                                          _vec(rplan.recv, 1.0),
-                                         _vec(rplan.rejoin, 0.0))
+                                         _vec(rplan.rejoin, 0.0),
+                                         _vec(ontime, 1.0))
                     bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
                 elif robust:
                     (cohort_tr, cohort_opt, global_params, pending, _, _,
@@ -427,7 +496,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                         cohort_tr, cohort_opt, global_params, pending,
                         st_masks, prompts, keys, alphas_h, alphas_s, weights,
                         _vec(rplan.train, 1.0), _vec(rplan.recv, 1.0),
-                        _vec(rplan.rejoin, 0.0), ck)
+                        _vec(rplan.rejoin, 0.0), _vec(ontime, 1.0), ck)
                     bits = [float(b)
                             for b in np.asarray(eng_bits)[:cfg.n_clients]]
                 elif codec is None:
@@ -446,15 +515,15 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 for cl, p in zip(clients,
                                  trees.unstack(cohort_tr, cfg.n_clients)):
                     cl["params"] = p
+            extra = None
             if robust:
-                charged = tracker.end_round(rplan, np.asarray(bits,
-                                                              np.float64))
-                reports = [budget.report(charged[ci], gains[ci])
-                           for ci in range(cfg.n_clients)
-                           if rplan.attempt[ci] > 0]
+                fresh = np.asarray(bits, np.float64)
+                charged = tracker.end_round(rplan, fresh)
+                reports = _round_reports(rplan, charged, gains)
+                extra = _round_extra(rplan, fresh)
             else:
                 reports = budget.round_reports(bits, gains)
-            ledger.log_round(reports)
+            ledger.log_round(reports, extra)
             # (aggregation + broadcast already fused into the round step)
         else:
             fresh = np.zeros(cfg.n_clients, np.float64)
@@ -524,12 +593,12 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                     fresh[ci] = float(b)
                 if not robust:
                     reports.append(budget.report(fresh[ci], gains[ci]))
+            extra = None
             if robust:
                 charged = tracker.end_round(rplan, fresh)
-                reports = [budget.report(charged[ci], gains[ci])
-                           for ci in range(cfg.n_clients)
-                           if rplan.attempt[ci] > 0]
-            ledger.log_round(reports)
+                reports = _round_reports(rplan, charged, gains)
+                extra = _round_extra(rplan, fresh)
+            ledger.log_round(reports, extra)
 
             def upload(ci, kind):
                 if codec is not None:
@@ -619,6 +688,8 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
         "mean_round_delay_s": ledger.mean_round_delay,
         "total_bytes": ledger.total_bytes,
         "total_energy_j": ledger.total_energy_j,
+        "total_sim_time_s": ledger.total_sim_time_s,
+        "quorum_noops": ledger.quorum_noops,
         "uplink_codec": cfg.uplink_codec,
         "rm_pair_acc": {"help": rmh_stats["pair_acc"],
                         "safe": rms_stats["pair_acc"]},

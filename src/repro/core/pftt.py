@@ -78,7 +78,8 @@ from repro.models import Model
 from repro.models import peft as peft_mod
 from repro.optim import adamw
 from repro.sharding import MeshCtx, cohort_sharding
-from repro.wireless import CommLedger, RayleighChannel, tree_bytes
+from repro.wireless import (ArrivalModel, CommLedger, DeadlineConfig,
+                            FaultPlan, RayleighChannel, tree_bytes)
 
 METHODS = ("pftt", "vanilla_fl", "fedbert", "fedlora")
 
@@ -121,6 +122,12 @@ class PFTTConfig:
     staleness_a: float = 0.0       # staleness exponent a in α·(1+s)^(-a)
     max_staleness: int = 0         # drop pending payloads older than this;
                                    # 0 = sync drop-on-failure semantics
+    deadline: Optional[DeadlineConfig] = None  # continuous-time round
+                                   # (wireless/arrivals.py): channel-driven
+                                   # arrival times, server deadline, retry
+                                   # backoff, min_quorum gate; an inert
+                                   # config (or None) is bitwise the
+                                   # round-granular robust runtime
     ckpt_dir: Optional[str] = None # save the stacked round state per round
                                    # (engine path) for kill + --resume
     resume: bool = False           # restart from ckpt_dir's last round
@@ -339,13 +346,20 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
 
     # ---- straggler-tolerant runtime (core/robust.py + wireless/faults.py):
     # the fault trace and the staleness tracker are shared verbatim by the
-    # engine and the legacy loop, so both paths see identical weights/charges
-    robust = cfg.fault_plan is not None
-    trace = cfg.fault_plan.realize(cfg.n_clients, cfg.rounds) if robust \
-        else None
+    # engine and the legacy loop, so both paths see identical weights/charges.
+    # A non-inert DeadlineConfig switches the tracker to the continuous-time
+    # round (wireless/arrivals.py) — with or without an injected fault plan
+    dl = cfg.deadline if (cfg.deadline is not None
+                          and not cfg.deadline.is_inert()) else None
+    robust = cfg.fault_plan is not None or dl is not None
+    trace = (cfg.fault_plan or FaultPlan()).realize(
+        cfg.n_clients, cfg.rounds) if robust else None
+    arrivals = ArrivalModel(channel, dl, cfg.n_clients) \
+        if dl is not None else None
     tracker = StalenessTracker(cfg.n_clients, StalenessConfig(
         alpha=cfg.staleness_alpha, a=cfg.staleness_a,
-        max_staleness=cfg.max_staleness)) if robust else None
+        max_staleness=cfg.max_staleness), deadline=dl,
+        arrivals=arrivals) if robust else None
     codec = get_codec(cfg.uplink_codec)
     codec_key = jax.random.fold_in(key, 0x0C0DEC)
     # legacy-loop codec roundtrip (per client; the engine vmaps the same
@@ -371,7 +385,8 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
             local_step, upload_pred,
             mesh=cs.mesh if cs is not None else None,
             client_axes=cs.axes if cs is not None else None,
-            codec=codec, factored_agg=cfg.factored_agg, robust=robust)
+            codec=codec, factored_agg=cfg.factored_agg, robust=robust,
+            min_quorum=(dl.min_quorum if dl is not None else 0))
         pad = cs.pad if cs is not None else (lambda xs: xs)
         cohort_tr = trees.stack(pad([cl["trainable"] for cl in clients]))
         cohort_opt = trees.stack(pad([cl["opt_state"] for cl in clients]))
@@ -388,6 +403,35 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         pending_list = [jax.tree_util.tree_map(
             jnp.zeros_like, trees.select(cl["trainable"], upload_pred))
             for cl in clients]
+
+    # scheduling-size estimate for the continuous-time round (see
+    # wireless/arrivals.py): exact for uncompressed uploads; codec fresh
+    # uploads reserve the worst-case encoded size until the first realized
+    # size replaces it.  The ledger always charges realized bits.
+    est_bits = None
+    if dl is not None:
+        if codec is None:
+            est_bits = np.asarray(
+                [payload_bytes(cl["trainable"]) * 8 for cl in clients],
+                np.float64)
+        else:
+            est_bits = np.asarray(
+                [codec_mod.payload_bits_upper_bound(
+                    codec, trees.select(cl["trainable"], upload_pred))
+                 + act_bits() for cl in clients], np.float64)
+
+    def _round_reports(rplan, charged, gains):
+        """Per-attempt channel reports; deadline mode charges every
+        attempt's airtime and books bytes only on delivery."""
+        if dl is None:
+            return [budget.report(charged[ci], gains[ci])
+                    for ci in range(cfg.n_clients) if rplan.attempt[ci] > 0]
+        return [budget.attempt_report(
+                    charged[ci], gains[ci],
+                    tx_time_s=float(rplan.tx_time_s[ci]),
+                    arrival_s=float(rplan.arrival_s[ci]),
+                    delivered=bool(rplan.delivered[ci] > 0))
+                for ci in range(cfg.n_clients) if rplan.attempt[ci] > 0]
 
     def _vec(v, fill=0.0):
         """Device round vector, ghost-padded with ``fill``."""
@@ -413,6 +457,8 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
             if robust:
                 tpl["pending"] = pending
                 tracker.load_state_dict(meta["tracker"])
+                if dl is not None and "est_bits" in meta:
+                    est_bits = np.asarray(meta["est_bits"], np.float64)
             state = load_checkpoint(ckpt_file, tpl)
             cohort_tr, cohort_opt = state["trainable"], state["opt"]
             if robust:
@@ -424,6 +470,8 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                     pending = jax.device_put(pending, cs.named)
             for _ in range(start_round):        # burn the skipped rounds'
                 channel.realize(cfg.n_clients)  # host RNG draws
+                if arrivals is not None:
+                    arrivals.burn_round()       # compute-time draws
                 for ci in range(cfg.n_clients):
                     for _s in range(cfg.local_steps):
                         next(client_iters[ci])
@@ -434,7 +482,8 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         if robust:
             rf = trace.round(rnd)
             gains = gains * rf.gain_scale       # injected SNR dips
-            rplan = tracker.begin_round(rf, channel.outage_weights(gains))
+            rplan = tracker.begin_round(rf, channel.outage_weights(gains),
+                                        gains=gains, fresh_bits=est_bits)
         rnd_key = jax.random.fold_in(codec_key, rnd)
         reports = []
         if use_engine:
@@ -446,7 +495,12 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
             batches = stacker(pad(
                 [[next(client_iters[ci]) for _ in range(cfg.local_steps)]
                  for ci in range(cfg.n_clients)]))
-            w = rplan.agg_w if robust else channel.outage_weights(gains)
+            # deadline mode hands the engine the pre-deadline weights plus
+            # the on-time mask; their product (applied in the fused body)
+            # is the pre-quorum agg_w, and the body re-derives the quorum
+            # gate so engine and legacy loop agree bit-for-bit
+            w = (rplan.agg_w_pre if dl is not None else rplan.agg_w) \
+                if robust else channel.outage_weights(gains)
             weights = jax.device_put(cs.pad_weights(w), cs.named) \
                 if cs is not None else jnp.asarray(w)
             ck = None
@@ -459,8 +513,11 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
             if robust:
                 # ghosts train + receive like real clients (as in the sync
                 # engine) but never rejoin and carry zero agg weight
+                ontime = rplan.ontime if dl is not None \
+                    else np.ones(cfg.n_clients, np.float32)
                 margs = (_vec(rplan.train, 1.0), weights,
-                         _vec(rplan.recv, 1.0), _vec(rplan.rejoin, 0.0))
+                         _vec(rplan.recv, 1.0), _vec(rplan.rejoin, 0.0),
+                         _vec(ontime, 1.0))
                 if codec is None:
                     cohort_tr, cohort_opt, pending, _ = round_step(
                         cohort_tr, cohort_opt, pending, batches, *margs)
@@ -472,9 +529,7 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                     fresh = (np.asarray(eng_bits, np.float64)[:cfg.n_clients]
                              + act_bits())
                 charged = tracker.end_round(rplan, fresh)
-                reports = [budget.report(charged[ci], gains[ci])
-                           for ci in range(cfg.n_clients)
-                           if rplan.attempt[ci] > 0]
+                reports = _round_reports(rplan, charged, gains)
             elif codec is None:
                 cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
                                                       batches, weights)
@@ -514,10 +569,17 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                     reports.append(budget.report(fresh[ci], gains[ci]))
             if robust:
                 charged = tracker.end_round(rplan, fresh)
-                reports = [budget.report(charged[ci], gains[ci])
-                           for ci in range(cfg.n_clients)
-                           if rplan.attempt[ci] > 0]
-        ledger.log_round(reports)
+                reports = _round_reports(rplan, charged, gains)
+        extra = None
+        if dl is not None:
+            extra = {"sim_dt_s": float(rplan.sim_dt_s),
+                     "quorum_noop": not rplan.quorum_ok,
+                     "n_delivered": int(rplan.n_delivered),
+                     "corrupt": int(np.asarray(rplan.corrupt).sum())}
+            if codec is not None:   # realized encoded size becomes the next
+                est_bits = np.where(  # scheduling estimate
+                    np.asarray(rplan.train) > 0, fresh, est_bits)
+        ledger.log_round(reports, extra)
 
         # --- aggregation over surviving clients (partial for pftt); in the
         # engine path this already happened inside the fused round step.
@@ -573,6 +635,8 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                     "ledger_rounds": ledger.rounds}
             if robust:
                 meta["tracker"] = tracker.state_dict()
+                if dl is not None:
+                    meta["est_bits"] = [float(b) for b in est_bits]
             with open(meta_file, "w") as f:
                 json.dump(meta, f)
         if cfg.verbose and rnd % 5 == 0:
@@ -592,6 +656,9 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         "mean_round_delay_s": ledger.mean_round_delay,
         "total_bytes": ledger.total_bytes,
         "total_energy_j": ledger.total_energy_j,
+        "total_sim_time_s": ledger.total_sim_time_s,
+        "quorum_noops": ledger.quorum_noops,
+        "round_records": ledger.rounds,
         "uplink_codec": cfg.uplink_codec,
         "eval_dispatches_per_round": eval_dispatches[0] / max(cfg.rounds, 1),
         "fused_engine": bool(use_engine),

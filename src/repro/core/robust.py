@@ -50,10 +50,12 @@ chance).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional
 
 import numpy as np
 
+from repro.wireless.arrivals import ArrivalModel, DeadlineConfig
 from repro.wireless.faults import RoundFaults
 
 
@@ -78,14 +80,35 @@ class StalenessConfig:
 
 @dataclasses.dataclass(frozen=True)
 class RoundPlan:
-    """One round's resolved schedule (all (n_clients,) arrays)."""
+    """One round's resolved schedule (all (n_clients,) arrays).
+
+    The continuous-time fields are only populated when the tracker runs
+    with a ``DeadlineConfig`` (else they keep their inert defaults and the
+    plan is exactly the PR 6 round-granular one)."""
     train: np.ndarray      # float32 — client runs local steps
     recv: np.ndarray       # float32 — client receives the broadcast
     rejoin: np.ndarray     # float32 — crash rejoin (opt state reset)
     attempt: np.ndarray    # float32 — a payload goes on the air
-    delivered: np.ndarray  # float32 — attempt survived the channel
+    delivered: np.ndarray  # float32 — attempt survived channel + checksum +
+                           #           deadline + quorum
     staleness: np.ndarray  # int64   — age of the payload on the air
-    agg_w: np.ndarray      # float32 — delivered · α·(1+s)^(-a)
+    agg_w: np.ndarray      # float32 — delivered · α·(1+s)^(-a) (final,
+                           #           quorum-aborted rounds are all-zero)
+    # ---- continuous-time extras (deadline mode) --------------------------
+    ontime: Optional[np.ndarray] = None    # f32 — arrival ≤ deadline (the
+                                           # engine's deadline mask input)
+    corrupt: Optional[np.ndarray] = None   # f32 — checksum-NACKed attempt
+    agg_w_pre: Optional[np.ndarray] = None  # f32 — discount · delivered-
+                                           # before-deadline/quorum (the
+                                           # engine multiplies by ``ontime``
+                                           # and applies the quorum gate
+                                           # in-body; ``agg_w_pre · ontime``
+                                           # == pre-quorum ``agg_w``)
+    arrival_s: Optional[np.ndarray] = None  # f64 — scheduled arrival time
+    tx_time_s: Optional[np.ndarray] = None  # f64 — scheduled airtime
+    quorum_ok: bool = True                 # round met ``min_quorum``
+    n_delivered: int = 0                   # deliveries before the quorum gate
+    sim_dt_s: float = 0.0                  # simulated round duration
 
 
 class StalenessTracker:
@@ -96,34 +119,124 @@ class StalenessTracker:
     size it was produced at (``bits`` — what a retransmission charges).
     The payload *contents* live device-side in the engine's pending buffer
     (or the legacy loop's per-client list); the tracker only ever sees
-    masks and sizes, which is why both paths can share one instance."""
+    masks and sizes, which is why both paths can share one instance.
 
-    def __init__(self, n_clients: int, cfg: Optional[StalenessConfig] = None):
+    With a ``DeadlineConfig`` + ``ArrivalModel`` the tracker additionally
+    runs the continuous-time round (``wireless/arrivals.py``): per-client
+    arrival times decide a deadline mask, failed attempts (outage, checksum
+    NACK, deadline miss) retry under capped exponential backoff and are
+    abandoned after ``max_retries``, and a round delivering fewer than
+    ``min_quorum`` payloads is voided server-side (deliveries NACKed back
+    to pending, no failure counted, no merge).  Passing ``deadline=None``
+    is byte-for-byte the PR 6 round-granular tracker."""
+
+    def __init__(self, n_clients: int, cfg: Optional[StalenessConfig] = None,
+                 *, deadline: Optional[DeadlineConfig] = None,
+                 arrivals: Optional[ArrivalModel] = None):
         self.cfg = cfg or StalenessConfig()
         self.valid = np.zeros(n_clients, bool)
         self.age = np.zeros(n_clients, np.int64)
         self.bits = np.zeros(n_clients, np.float64)
+        if deadline is not None and arrivals is None:
+            raise ValueError("deadline mode needs an ArrivalModel")
+        self.deadline = deadline
+        self.arrivals = arrivals
+        # continuous-time state (inert until a DeadlineConfig is set)
+        self.fails = np.zeros(n_clients, np.int64)     # failed attempts of
+        #                                              # the current payload
+        self.next_try_s = np.zeros(n_clients, np.float64)  # backoff window
+        self.now_s = 0.0                               # simulated clock
+        self.quorum_noops = 0                          # voided rounds
+        self.abandoned = 0                             # payloads given up
 
-    def begin_round(self, faults: RoundFaults,
-                    outage_w: np.ndarray) -> RoundPlan:
+    def begin_round(self, faults: RoundFaults, outage_w: np.ndarray, *,
+                    gains: Optional[np.ndarray] = None,
+                    fresh_bits: Optional[np.ndarray] = None) -> RoundPlan:
         """Resolve the round schedule from the fault masks and the realized
-        channel outage weights (1.0 delivered / 0.0 outage per client)."""
+        channel outage weights (1.0 delivered / 0.0 outage per client).
+
+        Deadline mode additionally needs ``gains`` (the realized fading
+        draws, dips included) and ``fresh_bits`` (the host-known encoded
+        payload size each *training* client would put on the air — exact
+        for uncompressed uploads, the previously realized encoded size for
+        codec runs; retransmitters always use their buffered size)."""
         # payloads produced in an earlier round are one round staler now;
         # anything beyond the staleness bound is abandoned
         self.age[self.valid] += 1
         self.valid &= self.age <= self.cfg.max_staleness
         train = faults.train > 0
-        has_payload = train | self.valid        # fresh upload or buffered
+        if self.deadline is None:
+            has_payload = train | self.valid    # fresh upload or buffered
+            attempt = (faults.tx > 0) & has_payload
+            # a corrupted payload fails its host-side checksum on delivery
+            # and is NACKed exactly like an outage (never merged) — also in
+            # the round-granular runtime (None for pre-corruption traces)
+            corrupt = np.zeros(len(self.valid), bool) \
+                if faults.corrupt is None else (faults.corrupt > 0)
+            corrupt = corrupt & attempt
+            delivered = attempt & (np.asarray(outage_w) > 0) & ~corrupt
+            staleness = np.where(train, 0, self.age)
+            agg_w = np.where(delivered, self.cfg.discount(staleness), 0.0)
+            return RoundPlan(
+                train=train.astype(np.float32), recv=faults.recv.copy(),
+                rejoin=faults.rejoin.copy(),
+                attempt=attempt.astype(np.float32),
+                delivered=delivered.astype(np.float32),
+                staleness=staleness.astype(np.int64),
+                agg_w=agg_w.astype(np.float32),
+                corrupt=corrupt.astype(np.float32))
+
+        # ---- continuous-time round ---------------------------------------
+        dl = self.deadline
+        if gains is None or fresh_bits is None:
+            raise ValueError("deadline mode needs gains= and fresh_bits=")
+        n = len(self.valid)
+        # a buffered payload can only go back on the air once its backoff
+        # window opens inside this round's deadline; fresh uploads replace
+        # the pending payload and are never backoff-gated
+        start_wait = np.maximum(self.next_try_s - self.now_s, 0.0)
+        ready = start_wait < dl.deadline_s
+        has_payload = train | (self.valid & ready)
         attempt = (faults.tx > 0) & has_payload
-        delivered = attempt & (np.asarray(outage_w) > 0)
+        rates = self.arrivals.rates(gains)
+        # drawn every round (fixed-size block → the RNG stream stays aligned
+        # across the engine, the legacy loop, and checkpoint resume)
+        ct = self.arrivals.compute_times(faults.compute_scale)
+        bits_on_air = np.where(train, np.asarray(fresh_bits, np.float64),
+                               self.bits)
+        start = np.where(train, ct, start_wait)
+        tx_time = bits_on_air / rates
+        arrival = start + tx_time
+        ontime = arrival <= dl.deadline_s
+        corrupt = np.zeros(n, bool) if faults.corrupt is None \
+            else (faults.corrupt > 0)
+        corrupt = corrupt & attempt
+        clean = attempt & (np.asarray(outage_w) > 0) & ~corrupt
+        delivered = clean & ontime
         staleness = np.where(train, 0, self.age)
-        agg_w = np.where(delivered, self.cfg.discount(staleness), 0.0)
+        disc = self.cfg.discount(staleness)
+        agg_w_pre = np.where(clean, disc, 0.0).astype(np.float32)
+        agg_w = np.where(delivered, disc, 0.0).astype(np.float32)
+        n_del = int(delivered.sum())
+        quorum_ok = n_del >= dl.min_quorum
+        if not quorum_ok:       # server aborts the round: nothing merges,
+            delivered = np.zeros(n, bool)  # deliveries are NACKed back to
+            agg_w = np.zeros(n, np.float32)  # pending (no failure counted)
+        if math.isinf(dl.deadline_s):
+            ok = clean
+            sim_dt = float(arrival[ok].max()) if ok.any() else \
+                (float(ct[train].max()) if train.any() else 0.0)
+        else:
+            sim_dt = float(dl.deadline_s)
         return RoundPlan(
             train=train.astype(np.float32), recv=faults.recv.copy(),
             rejoin=faults.rejoin.copy(), attempt=attempt.astype(np.float32),
             delivered=delivered.astype(np.float32),
-            staleness=staleness.astype(np.int64),
-            agg_w=agg_w.astype(np.float32))
+            staleness=staleness.astype(np.int64), agg_w=agg_w,
+            ontime=ontime.astype(np.float32),
+            corrupt=corrupt.astype(np.float32), agg_w_pre=agg_w_pre,
+            arrival_s=arrival, tx_time_s=tx_time,
+            quorum_ok=quorum_ok, n_delivered=n_del, sim_dt_s=sim_dt)
 
     def end_round(self, plan: RoundPlan,
                   fresh_bits: np.ndarray) -> np.ndarray:
@@ -140,16 +253,54 @@ class StalenessTracker:
         self.bits = np.where(train, fresh_bits, self.bits)
         self.age = np.where(train, 0, self.age)
         self.valid = np.where(train, ~delivered, self.valid & ~delivered)
-        self.valid &= ~(plan.rejoin > 0)        # crash drops the buffer
+        if self.deadline is not None:
+            attempt = plan.attempt > 0
+            # channel-caused failures only: a quorum-voided round counts no
+            # failures and schedules no backoff (the abort is the server's)
+            failed = attempt & ~delivered & plan.quorum_ok
+            self.fails = np.where(train, 0, self.fails)   # fresh payload
+            self.fails = np.where(failed, self.fails + 1, self.fails)
+            self.fails = np.where(delivered, 0, self.fails)
+            end_t = self.now_s + plan.sim_dt_s
+            wait = self.arrivals.backoff_wait_s(self.fails)
+            self.next_try_s = np.where(
+                failed, end_t + wait,
+                np.where(attempt | train, 0.0, self.next_try_s))
+            # abandonment after max_retries failed retransmissions: the
+            # payload (and its bit charge) drops out of the ledger for good
+            exhausted = self.fails > self.deadline.max_retries
+            self.abandoned += int((exhausted & self.valid).sum())
+            self.valid &= ~exhausted
+            self.bits = np.where(exhausted, 0.0, self.bits)
+            self.fails = np.where(exhausted, 0, self.fails)
+            self.next_try_s = np.where(exhausted, 0.0, self.next_try_s)
+            if not plan.quorum_ok:
+                self.quorum_noops += 1
+            self.now_s = end_t
+        rejoin = plan.rejoin > 0
+        self.valid &= ~rejoin                   # crash drops the buffer
+        self.fails = np.where(rejoin, 0, self.fails)
+        self.next_try_s = np.where(rejoin, 0.0, self.next_try_s)
         return charged
 
     # ---- checkpoint/resume ------------------------------------------------
 
     def state_dict(self) -> Dict:
         return {"valid": self.valid.astype(np.int64).tolist(),
-                "age": self.age.tolist(), "bits": self.bits.tolist()}
+                "age": self.age.tolist(), "bits": self.bits.tolist(),
+                "fails": self.fails.tolist(),
+                "next_try_s": self.next_try_s.tolist(),
+                "now_s": self.now_s, "quorum_noops": self.quorum_noops,
+                "abandoned": self.abandoned}
 
     def load_state_dict(self, d: Dict) -> None:
         self.valid = np.asarray(d["valid"], np.int64).astype(bool)
         self.age = np.asarray(d["age"], np.int64)
         self.bits = np.asarray(d["bits"], np.float64)
+        n = len(self.valid)
+        self.fails = np.asarray(d.get("fails", np.zeros(n)), np.int64)
+        self.next_try_s = np.asarray(d.get("next_try_s", np.zeros(n)),
+                                     np.float64)
+        self.now_s = float(d.get("now_s", 0.0))
+        self.quorum_noops = int(d.get("quorum_noops", 0))
+        self.abandoned = int(d.get("abandoned", 0))

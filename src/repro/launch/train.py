@@ -63,8 +63,26 @@ def main():
                          "of the weighted-mean update (never densified)")
     ap.add_argument("--fault-plan", default=None,
                     help="inject wireless faults into the FL run: 'k=v,...' "
-                         "(dropout_p/straggle_p/crash_p/snr_dip_p/seed/...) "
-                         "or a JSON file path (wireless.faults.FaultPlan)")
+                         "(dropout_p/straggle_p/crash_p/snr_dip_p/corrupt_p/"
+                         "seed/...) or a JSON file path "
+                         "(wireless.faults.FaultPlan)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="continuous-time FL round: server closes the round "
+                         "this many simulated seconds after dispatch; late "
+                         "arrivals buffer as stale retransmissions "
+                         "(wireless.arrivals.DeadlineConfig)")
+    ap.add_argument("--backoff-base-s", type=float, default=0.0,
+                    help="retransmission backoff base: the n-th failure of "
+                         "a payload waits base*2^(n-1) simulated seconds")
+    ap.add_argument("--max-retries", type=int, default=8,
+                    help="abandon a pending payload after this many failed "
+                         "retransmissions")
+    ap.add_argument("--min-quorum", type=int, default=0,
+                    help="void the round (no merge, deliveries NACKed back "
+                         "to pending) when fewer payloads arrive in time")
+    ap.add_argument("--compute-time-s", type=float, default=0.0,
+                    help="mean per-round local compute time before a fresh "
+                         "upload starts transmitting (stragglers scale it)")
     ap.add_argument("--staleness-a", type=float, default=0.0,
                     help="staleness discount exponent: late uploads merge "
                          "with weight α·(1+s)^(-a)")
@@ -117,8 +135,19 @@ def main():
                   "oracle parity OK")
         return
     if args.fl_clients:
+        import math
+
         from repro.core.pftt import PFTTConfig, run_pftt
-        from repro.wireless import FaultPlan
+        from repro.wireless import DeadlineConfig, FaultPlan
+        deadline = None
+        if (args.deadline_s is not None or args.backoff_base_s > 0
+                or args.min_quorum > 0 or args.compute_time_s > 0):
+            deadline = DeadlineConfig(
+                deadline_s=(args.deadline_s if args.deadline_s is not None
+                            else math.inf),
+                backoff_base_s=args.backoff_base_s,
+                max_retries=args.max_retries, min_quorum=args.min_quorum,
+                compute_mean_s=args.compute_time_s)
         print(f"federated cohort demo (PFTT reduced-roberta workload; "
               f"--steps/--seq ignored) on {n_dev} device(s)")
         mesh = jax.make_mesh((n_dev,), ("data",))
@@ -130,6 +159,7 @@ def main():
                          fault_plan=FaultPlan.from_spec(args.fault_plan),
                          staleness_a=args.staleness_a,
                          max_staleness=args.max_staleness,
+                         deadline=deadline,
                          ckpt_dir=args.ckpt_dir, resume=args.resume,
                          verbose=True)
         res = run_pftt(cfg, mesh=mesh, client_axes=("data",))
@@ -139,6 +169,10 @@ def main():
               f"(codec={args.uplink_codec}) mean round delay "
               f"{res['mean_round_delay_s']:.3f}s energy "
               f"{res['total_energy_j']:.2f}J")
+        if deadline is not None:
+            print(f"continuous-time round: sim time "
+                  f"{res['total_sim_time_s']:.1f}s quorum no-ops "
+                  f"{res['quorum_noops']}")
         if args.assert_fused:
             assert res["fused_engine"], "PFTT ran the legacy per-client loop"
             print("fused path asserted: engine round")

@@ -58,17 +58,20 @@ class CommLedger:
     """Per-round, per-client record of upload traffic, delay and energy."""
     rounds: List[Dict] = dataclasses.field(default_factory=list)
 
-    def log_round(self, reports):
+    def log_round(self, reports, extra=None):
         # an all-outage round has no completed upload: its delay is
         # undefined (NaN), not 0.0 — mean_round_delay skips it
         alive = [r.delay_s for r in reports if not r.outage]
-        self.rounds.append({
+        rec = {
             "bytes": sum(r.bytes_sent for r in reports),
             "delay_s": max(alive) if alive else float("nan"),
             "energy_j": sum(getattr(r, "energy_j", 0.0) for r in reports),
             "outages": sum(r.outage for r in reports),
             "per_client": [dataclasses.asdict(r) for r in reports],
-        })
+        }
+        if extra:   # continuous-time round extras (sim_dt_s, quorum_noop,
+            rec.update(extra)  # corrupt …) — see core/robust.py
+        self.rounds.append(rec)
 
     @property
     def total_bytes(self) -> float:
@@ -87,3 +90,16 @@ class CommLedger:
         vals = [r["delay_s"] for r in self.rounds
                 if not np.isnan(r["delay_s"])]
         return float(np.mean(vals)) if vals else 0.0
+
+    # ---- continuous-time round extras (deadline mode) ---------------------
+
+    @property
+    def total_sim_time_s(self) -> float:
+        """Simulated wall-clock across rounds (deadline mode: the server
+        closes each round at its deadline, or at the last arrival when
+        waiting for everyone)."""
+        return sum(r.get("sim_dt_s", 0.0) for r in self.rounds)
+
+    @property
+    def quorum_noops(self) -> int:
+        return sum(1 for r in self.rounds if r.get("quorum_noop", False))

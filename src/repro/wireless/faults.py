@@ -23,6 +23,11 @@ Failure modes (per client, per round; priority crash > straggle > dropout):
 * **SNR dip** — the client's Rayleigh gain is scaled down by ``dip_db`` for
   the round; deep dips push the realized SNR below
   ``RayleighChannel.outage_snr_db`` and trigger the retransmission path.
+* **corruption** — the client's delivered payload is corrupted in transit
+  for the round: the server's checksum (``comms.codec.payload_checksum``)
+  rejects it, the delivery is NACKed into the retransmission path and never
+  merged.  Memoryless per round, like dropout; only observable on rounds
+  the client actually puts a payload on the air.
 
 The trace deliberately stays *channel-independent*: it scales the fading
 gains (``gain_scale``) and gates the uplink (``tx``), but outage decisions
@@ -49,6 +54,13 @@ class RoundFaults:
     rejoin: np.ndarray       # client rejoins after a crash (reset opt state,
                              # drop pre-crash pending payload)
     gain_scale: np.ndarray   # multiplies the Rayleigh |h|² draw (SNR dips)
+    # the two continuous-time fields default to None (= no corruption,
+    # unit compute scale) so round-granular consumers and hand-built
+    # RoundFaults keep working unchanged
+    corrupt: Optional[np.ndarray] = None       # payload corrupted in transit
+    compute_scale: Optional[np.ndarray] = None  # straggle factor for the
+                                               # compute-time draw (1 + k on
+                                               # straggle rounds)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +72,8 @@ class FaultTrace:
     recv: np.ndarray
     rejoin: np.ndarray
     gain_scale: np.ndarray
+    corrupt: Optional[np.ndarray] = None
+    compute_scale: Optional[np.ndarray] = None
 
     @property
     def rounds(self) -> int:
@@ -77,10 +91,16 @@ class FaultTrace:
             one = np.ones((n,), np.float32)
             return RoundFaults(train=one, tx=one, recv=one,
                                rejoin=np.zeros((n,), np.float32),
-                               gain_scale=one.copy())
-        return RoundFaults(train=self.train[r], tx=self.tx[r],
-                           recv=self.recv[r], rejoin=self.rejoin[r],
-                           gain_scale=self.gain_scale[r])
+                               gain_scale=one.copy(),
+                               corrupt=np.zeros((n,), np.float32),
+                               compute_scale=one.copy())
+        return RoundFaults(
+            train=self.train[r], tx=self.tx[r],
+            recv=self.recv[r], rejoin=self.rejoin[r],
+            gain_scale=self.gain_scale[r],
+            corrupt=None if self.corrupt is None else self.corrupt[r],
+            compute_scale=(None if self.compute_scale is None
+                           else self.compute_scale[r]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,11 +116,13 @@ class FaultPlan:
     max_crash: int = 4           # crash length d ~ uniform{1..max_crash}
     snr_dip_p: float = 0.0
     snr_dip_db: float = 20.0     # gain scaled by 10^(-dip/10) on dip rounds
+    corrupt_p: float = 0.0       # payload corrupted in transit (checksum NACK)
     seed: int = 0
 
     def is_zero(self) -> bool:
         return (self.dropout_p == 0 and self.straggle_p == 0
-                and self.crash_p == 0 and self.snr_dip_p == 0)
+                and self.crash_p == 0 and self.snr_dip_p == 0
+                and self.corrupt_p == 0)
 
     def realize(self, n_clients: int, rounds: int) -> FaultTrace:
         rng = np.random.RandomState(self.seed)
@@ -110,6 +132,8 @@ class FaultPlan:
         recv = np.ones(shape, np.float32)
         rejoin = np.zeros(shape, np.float32)
         gain_scale = np.ones(shape, np.float32)
+        corrupt = np.zeros(shape, np.float32)
+        compute_scale = np.ones(shape, np.float32)
 
         # per-client state machines, advanced round-major so a fixed seed
         # yields one canonical trace regardless of the consumer
@@ -123,6 +147,11 @@ class FaultPlan:
             k_strag = rng.randint(1, self.max_straggle + 1, n_clients)
             u_drop = rng.rand(n_clients)
             u_dip = rng.rand(n_clients)
+            # the corruption block is only drawn when the mode is enabled,
+            # so every pre-existing plan replays its exact PR 6 trace
+            u_corr = rng.rand(n_clients) if self.corrupt_p > 0 else None
+            if u_corr is not None:
+                corrupt[r] = (u_corr < self.corrupt_p).astype(np.float32)
             for c in range(n_clients):
                 if u_dip[c] < self.snr_dip_p:
                     gain_scale[r, c] = 10.0 ** (-self.snr_dip_db / 10.0)
@@ -150,11 +179,15 @@ class FaultPlan:
                 if u_strag[c] < self.straggle_p:     # straggle starts: train
                     busy[c] = int(k_strag[c])        # now, deliver at r+k
                     tx[r, c] = 0.0
+                    # continuous-time view of the same event: the local
+                    # update takes 1+k round-times of compute
+                    compute_scale[r, c] = 1.0 + float(k_strag[c])
                     continue
                 if u_drop[c] < self.dropout_p:       # plain missed round
                     train[r, c] = tx[r, c] = recv[r, c] = 0.0
         return FaultTrace(train=train, tx=tx, recv=recv, rejoin=rejoin,
-                          gain_scale=gain_scale)
+                          gain_scale=gain_scale, corrupt=corrupt,
+                          compute_scale=compute_scale)
 
     # ---- serialization (launch flags, benchmark manifests) ----------------
 

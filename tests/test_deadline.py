@@ -1,0 +1,414 @@
+"""Continuous-time robust rounds: channel-driven deadlines, retransmission
+backoff, payload integrity, and the min-quorum gate.
+
+Unit layer: the ``StalenessTracker`` in deadline mode is a pure host-side
+function of trace masks + realized gains + known payload sizes, so every
+semantic (deadline miss → pending, capped exponential backoff, retry
+exhaustion, checksum NACK, quorum no-op) is pinned directly on tiny arrays.
+Integration layer: engine-vs-legacy-loop parity under the FULL fault mix
+(dropout + straggle + crash + SNR dip + corruption) with a finite deadline,
+and bitwise equivalence of the inert config with the round-granular runtime.
+"""
+import json
+import math
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.comms import payload_checksum
+from repro.core.robust import RoundPlan, StalenessConfig, StalenessTracker
+from repro.wireless import (ArrivalModel, DeadlineConfig, FaultPlan,
+                            RayleighChannel)
+from repro.wireless.faults import RoundFaults
+
+
+# ---------------------------------------------------------------------------
+# payload integrity: host-side checksum
+# ---------------------------------------------------------------------------
+
+def test_payload_checksum_detects_flip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"w": jnp.ones(4, jnp.float32)}}
+    ref = payload_checksum(tree)
+    assert ref == payload_checksum(tree)          # deterministic
+    flipped = {"a": tree["a"].at[1, 2].add(1e-3), "b": tree["b"]}
+    assert payload_checksum(flipped) != ref       # single-element corruption
+    renamed = {"a2": tree["a"], "b": tree["b"]}
+    assert payload_checksum(renamed) != ref       # path is part of the sum
+    assert 0 <= ref <= 0xFFFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# spec parsing (satellite: unknown keys must raise, not silently ignore)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_from_spec_unknown_key_raises():
+    with pytest.raises(ValueError) as ei:
+        FaultPlan.from_spec("dropout_p=0.1,bogus_knob=3")
+    assert "bogus_knob" in str(ei.value)
+    assert "dropout_p" in str(ei.value)           # lists the valid keys
+    with pytest.raises(ValueError):
+        FaultPlan.from_dict({"corrupt_p": 0.1, "nope": 1})
+    # the corruption knob itself is a valid key
+    assert FaultPlan.from_spec("corrupt_p=0.25").corrupt_p == 0.25
+
+
+def test_deadline_config_from_spec():
+    assert DeadlineConfig.from_spec(None) is None
+    assert DeadlineConfig.from_spec("none") is None
+    cfg = DeadlineConfig.from_spec("deadline_s=0.5,min_quorum=2,seed=7")
+    assert cfg.deadline_s == 0.5 and cfg.min_quorum == 2 and cfg.seed == 7
+    assert not cfg.is_inert()
+    assert DeadlineConfig().is_inert()
+    assert math.isinf(DeadlineConfig.from_spec("deadline_s=inf").deadline_s)
+    with pytest.raises(ValueError):
+        DeadlineConfig.from_spec("deadline_s=0.5,bogus=1")
+    rt = DeadlineConfig.from_dict(cfg.to_dict())
+    assert rt == cfg
+
+
+def test_deadline_config_from_json_file(tmp_path):
+    p = tmp_path / "dl.json"
+    p.write_text(json.dumps({"deadline_s": 1.5, "backoff_base_s": 0.1}))
+    cfg = DeadlineConfig.from_spec(str(p))
+    assert cfg.deadline_s == 1.5 and cfg.backoff_base_s == 0.1
+
+
+# ---------------------------------------------------------------------------
+# tracker semantics in deadline mode (pure host-side units)
+# ---------------------------------------------------------------------------
+
+N = 3
+
+
+def _tracker(dl, **cfg_kw):
+    ch = RayleighChannel(mean_snr_db=5.0, seed=0)
+    arr = ArrivalModel(ch, dl, N)
+    tr = StalenessTracker(N, StalenessConfig(**cfg_kw), deadline=dl,
+                          arrivals=arr)
+    return tr, arr, ch
+
+
+def _faults(train, tx=None, corrupt=None):
+    train = np.asarray(train, np.float32)
+    one = np.ones(N, np.float32)
+    return RoundFaults(train=train, tx=one if tx is None else
+                       np.asarray(tx, np.float32),
+                       recv=one, rejoin=np.zeros(N, np.float32),
+                       gain_scale=one,
+                       corrupt=None if corrupt is None else
+                       np.asarray(corrupt, np.float32),
+                       compute_scale=None)
+
+
+def test_deadline_requires_arrival_model():
+    with pytest.raises(ValueError):
+        StalenessTracker(N, deadline=DeadlineConfig(deadline_s=1.0))
+
+
+def test_arrival_time_is_bits_over_realized_rate():
+    dl = DeadlineConfig(deadline_s=1.0)
+    tr, arr, ch = _tracker(dl)
+    gains = np.asarray([1.0, 1.0, 1.0])
+    bits = np.asarray([1e3, 1e6, 1e12], np.float64)
+    plan = tr.begin_round(_faults([1, 1, 1]), np.ones(N), gains=gains,
+                          fresh_bits=bits)
+    np.testing.assert_allclose(np.asarray(plan.arrival_s),
+                               bits / arr.rates(gains))
+    # the huge payload misses the deadline, the small ones make it
+    assert plan.ontime[0] == 1.0 and plan.ontime[2] == 0.0
+    assert plan.delivered[2] == 0.0 and plan.agg_w[2] == 0.0
+    # pre-deadline weights × ontime == final pre-quorum weights
+    np.testing.assert_array_equal(
+        np.asarray(plan.agg_w_pre) * np.asarray(plan.ontime),
+        np.asarray(plan.agg_w))
+    # round duration is the deadline when it is finite
+    assert plan.sim_dt_s == 1.0
+
+
+def test_deadline_miss_goes_pending_and_backs_off():
+    dl = DeadlineConfig(deadline_s=1.0, backoff_base_s=2.0)
+    tr, arr, _ = _tracker(dl, a=0.5, max_staleness=4)
+    gains = np.ones(N)
+    bits = np.asarray([1e3, 1e3, 1e12], np.float64)
+    plan = tr.begin_round(_faults([1, 1, 1]), np.ones(N), gains=gains,
+                          fresh_bits=bits)
+    charged = tr.end_round(plan, bits)
+    # the miss is charged (it transmitted) but buffered for retransmission
+    assert charged[2] == bits[2]
+    assert tr.valid[2] and not tr.valid[0]
+    assert tr.fails[2] == 1 and tr.fails[0] == 0
+    # first failure waits base·2^0 from the round's end
+    assert tr.next_try_s[2] == tr.now_s + 2.0
+    # next round: client 2 straggles (train=0) → its pending payload is
+    # backoff-gated: 2s wait > 1s deadline → it cannot even attempt
+    plan2 = tr.begin_round(_faults([1, 1, 0]), np.ones(N), gains=gains,
+                           fresh_bits=bits)
+    assert plan2.attempt[2] == 0.0
+    tr.end_round(plan2, bits)
+    assert tr.fails[2] == 1          # no attempt → no new failure
+    # after enough rounds the backoff window opens and it retries
+    for _ in range(4):
+        p = tr.begin_round(_faults([1, 1, 0]), np.ones(N), gains=gains,
+                           fresh_bits=bits)
+        tr.end_round(p, bits)
+        if p.attempt[2] > 0:
+            break
+    else:
+        pytest.fail("backoff window never opened")
+
+
+def test_retry_exhaustion_drops_pending_bits_from_ledger():
+    dl = DeadlineConfig(deadline_s=10.0, max_retries=2)
+    tr, _, _ = _tracker(dl, max_staleness=100)
+    gains = np.ones(N)
+    bits = np.full(N, 1e3, np.float64)
+    outage = np.asarray([0.0, 1.0, 1.0])    # client 0 always outages
+    total_charged = np.zeros(N)
+    train = [1, 1, 1]
+    for r in range(6):
+        plan = tr.begin_round(_faults(train), outage, gains=gains,
+                              fresh_bits=bits)
+        total_charged += tr.end_round(plan, bits)
+        train = [0, 1, 1]                   # client 0 never trains again
+    # fresh attempt + max_retries retransmissions, then abandoned: the
+    # pending payload's bits drop out of the ledger for good
+    assert tr.abandoned == 1
+    assert not tr.valid[0] and tr.bits[0] == 0.0 and tr.fails[0] == 0
+    assert total_charged[0] == bits[0] * (1 + dl.max_retries)
+
+
+def test_corrupt_and_outage_same_attempt_charges_once():
+    dl = DeadlineConfig(deadline_s=10.0)
+    tr, _, _ = _tracker(dl, max_staleness=4)
+    gains = np.ones(N)
+    bits = np.full(N, 1e3, np.float64)
+    # client 0 is simultaneously corrupted AND in outage: one attempt, one
+    # failure count, one charge
+    plan = tr.begin_round(_faults([1, 1, 1], corrupt=[1, 0, 0]),
+                          np.asarray([0.0, 1.0, 1.0]), gains=gains,
+                          fresh_bits=bits)
+    assert plan.attempt[0] == 1.0 and plan.delivered[0] == 0.0
+    assert plan.corrupt[0] == 1.0
+    charged = tr.end_round(plan, bits)
+    assert charged[0] == bits[0]            # exactly one airtime charge
+    assert tr.fails[0] == 1                 # not double-counted
+    # a corrupted-but-otherwise-clean delivery is NACKed, never merged
+    plan2 = tr.begin_round(_faults([1, 1, 1], corrupt=[1, 0, 0]),
+                           np.ones(N), gains=gains, fresh_bits=bits)
+    assert plan2.delivered[0] == 0.0 and plan2.agg_w[0] == 0.0
+    assert plan2.delivered[1] == 1.0
+
+
+def test_corruption_nacks_in_round_granular_mode_too():
+    """Without a DeadlineConfig the corrupted delivery is still detected
+    and dropped (checksum NACK ≈ outage) in the PR 6 tracker path."""
+    tr = StalenessTracker(N, StalenessConfig(max_staleness=2))
+    plan = tr.begin_round(_faults([1, 1, 1], corrupt=[0, 1, 0]), np.ones(N))
+    assert plan.delivered[1] == 0.0 and plan.agg_w[1] == 0.0
+    assert plan.delivered[0] == 1.0
+    tr.end_round(plan, np.full(N, 8.0))
+    assert tr.valid[1]                      # NACKed payload goes pending
+
+
+def test_quorum_noop_nacks_deliveries_without_backoff():
+    dl = DeadlineConfig(deadline_s=10.0, backoff_base_s=2.0, min_quorum=2)
+    tr, _, _ = _tracker(dl, max_staleness=4)
+    gains = np.ones(N)
+    bits = np.full(N, 1e3, np.float64)
+    # only one client delivers → under quorum → server voids the round
+    plan = tr.begin_round(_faults([1, 1, 1]), np.asarray([1.0, 0.0, 0.0]),
+                          gains=gains, fresh_bits=bits)
+    assert plan.n_delivered == 1 and not plan.quorum_ok
+    np.testing.assert_array_equal(np.asarray(plan.agg_w), np.zeros(N))
+    np.testing.assert_array_equal(np.asarray(plan.delivered), np.zeros(N))
+    charged = tr.end_round(plan, bits)
+    # airtime was spent by every attempt, even though nothing merged
+    np.testing.assert_array_equal(charged, bits)
+    assert tr.quorum_noops == 1
+    # the server's abort is not the channel's failure: no backoff penalty,
+    # no failure counted, every payload retained as pending
+    assert tr.fails[0] == 0 and tr.valid.all()
+    np.testing.assert_array_equal(tr.next_try_s, np.zeros(N))
+    # with enough deliveries the same tracker merges normally again
+    plan2 = tr.begin_round(_faults([1, 1, 1]), np.ones(N), gains=gains,
+                           fresh_bits=bits)
+    assert plan2.quorum_ok and plan2.n_delivered == N
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_min_quorum_zero_inf_deadline_matches_plain_tracker(seed):
+    """Property: an inf-deadline/no-backoff/no-compute/min_quorum=0 config
+    resolves every round EXACTLY like the round-granular tracker under an
+    arbitrary fault mix (the continuous-time round is a strict extension)."""
+    rng = np.random.RandomState(seed)
+    dl = DeadlineConfig()           # inert knobs, but force-run the deadline
+    tr_d, _, _ = _tracker(dl, a=0.5, max_staleness=2)   # code path anyway
+    tr_p = StalenessTracker(N, StalenessConfig(a=0.5, max_staleness=2))
+    bits = np.full(N, 1e4, np.float64)
+    for r in range(5):
+        f = _faults(rng.randint(0, 2, N), tx=rng.randint(0, 2, N),
+                    corrupt=rng.randint(0, 2, N))
+        outage = rng.randint(0, 2, N).astype(np.float64)
+        gains = rng.rand(N) + 0.1
+        pd = tr_d.begin_round(f, outage, gains=gains, fresh_bits=bits)
+        pp = tr_p.begin_round(f, outage)
+        for field in ("train", "attempt", "delivered", "staleness", "agg_w",
+                      "recv", "rejoin"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(pd, field)),
+                np.asarray(getattr(pp, field)), err_msg=field)
+        cd = tr_d.end_round(pd, bits)
+        cp = tr_p.end_round(pp, bits)
+        np.testing.assert_array_equal(cd, cp)
+        np.testing.assert_array_equal(tr_d.valid, tr_p.valid)
+        np.testing.assert_array_equal(tr_d.age, tr_p.age)
+
+
+def test_tracker_state_roundtrip_deadline_fields():
+    dl = DeadlineConfig(deadline_s=1.0, backoff_base_s=2.0)
+    tr, _, _ = _tracker(dl, max_staleness=4)
+    bits = np.asarray([1e3, 1e3, 1e12], np.float64)
+    plan = tr.begin_round(_faults([1, 1, 1]), np.ones(N), gains=np.ones(N),
+                          fresh_bits=bits)
+    tr.end_round(plan, bits)
+    tr2, _, _ = _tracker(dl, max_staleness=4)
+    tr2.load_state_dict(json.loads(json.dumps(tr.state_dict())))
+    np.testing.assert_array_equal(tr.fails, tr2.fails)
+    np.testing.assert_array_equal(tr.next_try_s, tr2.next_try_s)
+    assert tr.now_s == tr2.now_s and tr.abandoned == tr2.abandoned
+    # old (pre-deadline) checkpoints still load
+    tr3 = StalenessTracker(N)
+    tr3.load_state_dict({"valid": [0] * N, "age": [0] * N,
+                         "bits": [0.0] * N})
+    assert tr3.now_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# integration: engine vs legacy loop under deadline + full fault mix
+# ---------------------------------------------------------------------------
+
+PFTT_KW = dict(n_clients=3, rounds=3, local_steps=2, pretrain_steps=20,
+               samples_per_client=150, seed=0)
+MIX = FaultPlan(dropout_p=0.25, straggle_p=0.3, max_straggle=2, crash_p=0.1,
+                max_crash=1, snr_dip_p=0.2, corrupt_p=0.25, seed=5)
+DL = DeadlineConfig(deadline_s=0.05, backoff_base_s=0.01, max_retries=3,
+                    min_quorum=2, compute_mean_s=0.005, seed=11)
+
+
+def _ledgers_equal(a, b):
+    assert a["total_bytes"] == b["total_bytes"]
+    assert a["total_energy_j"] == b["total_energy_j"]
+    assert a["total_sim_time_s"] == b["total_sim_time_s"]
+    assert a["quorum_noops"] == b["quorum_noops"]
+
+
+def test_pftt_deadline_engine_matches_loop():
+    from repro.core.pftt import PFTTConfig, run_pftt
+    kw = dict(fault_plan=MIX, staleness_a=0.5, max_staleness=3, deadline=DL)
+    legacy = run_pftt(PFTTConfig(engine=False, **PFTT_KW, **kw))
+    fused = run_pftt(PFTTConfig(engine=True, **PFTT_KW, **kw))
+    np.testing.assert_allclose(legacy["acc_per_round"],
+                               fused["acc_per_round"], atol=1e-5)
+    _ledgers_equal(legacy, fused)
+    assert fused["total_sim_time_s"] > 0
+
+
+def test_pftt_inert_deadline_bitwise_plain_robust():
+    """deadline=DeadlineConfig() (inert) must be byte-for-byte the
+    round-granular robust engine: same accs, same ledger records."""
+    from repro.core.pftt import PFTTConfig, run_pftt
+    kw = dict(fault_plan=MIX, staleness_a=0.5, max_staleness=3)
+    plain = run_pftt(PFTTConfig(**PFTT_KW, **kw))
+    inert = run_pftt(PFTTConfig(**PFTT_KW, deadline=DeadlineConfig(), **kw))
+    assert plain["acc_per_round"] == inert["acc_per_round"]
+    assert plain["total_bytes"] == inert["total_bytes"]
+    assert plain["total_energy_j"] == inert["total_energy_j"]
+
+
+def test_pftt_deadline_without_fault_plan():
+    """A DeadlineConfig alone (no injected faults) activates the robust
+    continuous-time round over the zero-fault trace."""
+    from repro.core.pftt import PFTTConfig, run_pftt
+    res = run_pftt(PFTTConfig(**PFTT_KW, max_staleness=3,
+                              deadline=DeadlineConfig(deadline_s=0.05,
+                                                      compute_mean_s=0.01)))
+    assert res["total_sim_time_s"] == pytest.approx(0.05 * PFTT_KW["rounds"])
+
+
+def test_pftt_deadline_codec_engine_matches_loop():
+    """Deadline scheduling with compressed uplinks: the realized encoded
+    size rolls into the next round's scheduling estimate on both paths."""
+    from repro.core.pftt import PFTTConfig, run_pftt
+    kw = dict(fault_plan=MIX, staleness_a=0.5, max_staleness=3, deadline=DL,
+              uplink_codec="int8")
+    legacy = run_pftt(PFTTConfig(engine=False, **PFTT_KW, **kw))
+    fused = run_pftt(PFTTConfig(engine=True, **PFTT_KW, **kw))
+    np.testing.assert_allclose(legacy["acc_per_round"],
+                               fused["acc_per_round"], atol=1e-5)
+    _ledgers_equal(legacy, fused)
+
+
+PFIT_KW = dict(n_clients=3, rounds=2, rollout_batch=4, pretrain_steps=15,
+               rm_steps=15, d_model=48, n_layers=2, gen_len=8, prompt_len=6,
+               seed=0)
+
+
+def test_pfit_shepherd_deadline_engine_matches_loop():
+    from repro.core.pfit import PFITConfig, run_pfit
+    kw = dict(method="shepherd", shepherd_steps=2, fault_plan=MIX,
+              staleness_a=0.5, max_staleness=3, deadline=DL, **PFIT_KW)
+    legacy = run_pfit(PFITConfig(engine=False, **kw))
+    fused = run_pfit(PFITConfig(engine=True, **kw))
+    np.testing.assert_allclose(legacy["reward_per_round"],
+                               fused["reward_per_round"], atol=1e-3)
+    _ledgers_equal(legacy, fused)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: atomic writes (kill-during-write leaves the old file intact)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_atomic_kill_during_write(tmp_path, monkeypatch):
+    from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+    path = str(tmp_path / "state.npz")
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    save_checkpoint(path, tree)
+    ref = np.asarray(load_checkpoint(path, tree)["w"])
+
+    real_savez = np.savez
+
+    def dying_savez(f, **arrays):       # simulate a kill mid-serialization
+        f.write(b"\x00garbage")
+        raise KeyboardInterrupt
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(path, {"w": jnp.full(4, 9.0)})
+    monkeypatch.setattr(np, "savez", real_savez)
+    # the previous checkpoint is untouched and no tmp litter remains
+    np.testing.assert_array_equal(
+        np.asarray(load_checkpoint(path, tree)["w"]), ref)
+    assert not any(fn.endswith(".tmp") for fn in os.listdir(tmp_path))
+
+
+def test_pftt_deadline_resume_matches_uninterrupted(tmp_path):
+    """Kill-and-resume under the continuous-time round: the tracker state,
+    arrival draws and scheduling estimates all replay exactly."""
+    from repro.core.pftt import PFTTConfig, run_pftt
+    kw = dict(**PFTT_KW, fault_plan=MIX, staleness_a=0.5, max_staleness=3,
+              deadline=DL)
+    full = run_pftt(PFTTConfig(**kw))
+    d = str(tmp_path / "ck")
+    run_pftt(PFTTConfig(**{**kw, "rounds": 2}, ckpt_dir=d))
+    resumed = run_pftt(PFTTConfig(**kw, ckpt_dir=d, resume=True))
+    np.testing.assert_allclose(full["acc_per_round"],
+                               resumed["acc_per_round"], atol=1e-6)
+    assert full["total_bytes"] == resumed["total_bytes"]
+    assert full["total_sim_time_s"] == \
+        pytest.approx(resumed["total_sim_time_s"])

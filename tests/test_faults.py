@@ -214,12 +214,14 @@ def test_robust_round_ghost_padding_invariant():
     recv2 = jnp.asarray([1.0, 1.0])
     rej2 = jnp.asarray([0.0, 0.0])
     one, zero = jnp.ones(2), jnp.zeros(2)
-    ref = step(st_tr2, st_op2, pending2, batches2, train2, aggw2, recv2, rej2)
+    ref = step(st_tr2, st_op2, pending2, batches2, train2, aggw2, recv2, rej2,
+               one)
     got = step(st_tr4, st_op4, pending4, batches4,
                jnp.concatenate([train2, one]),      # ghosts train like sync
                jnp.concatenate([aggw2, zero]),      # ...at zero agg weight
                jnp.concatenate([recv2, one]),
-               jnp.concatenate([rej2, zero]))
+               jnp.concatenate([rej2, zero]),
+               jnp.ones(4))                         # all on time
     for r, g in zip(ref[:3], got[:3]):
         for k, leaf in trees.flatten(r).items():
             np.testing.assert_array_equal(
