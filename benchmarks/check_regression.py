@@ -1,0 +1,105 @@
+"""Bench-smoke regression gate: fresh headline metrics vs the committed
+reference BENCH files.
+
+    PYTHONPATH=src python -m benchmarks.check_regression --ref <dir> \
+        [--threshold 0.15]
+
+``--ref`` points at a directory holding the COMMITTED ``BENCH_*.json``
+files (CI copies them aside before ``benchmarks/run.py`` overwrites the
+working tree).  For every benchmark in the fresh ``BENCH_manifest.json``
+whose reference file exists, the same dotted headline path
+(``benchmarks/manifest.py``) is extracted from both sides and the
+degradation ratio computed in the metric's "good" direction — a
+higher-is-better headline degrades when it shrinks, a lower-is-better one
+when it grows.  Anything degraded more than ``--threshold`` (default 15%)
+is listed in a delta table and the process exits 1 (the CI job stays
+non-blocking; the table is the signal).  Missing references or freshly
+added benchmarks are reported and skipped — a new benchmark can't fail
+the gate before its reference lands.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.manifest import HEADLINES, MANIFEST_FILE, extract
+
+
+def compare(fresh_dir: str, ref_dir: str, threshold: float):
+    """→ (rows, regressions): one row per manifest entry; a row regresses
+    when the headline degrades >threshold in its good direction."""
+    mf = os.path.join(fresh_dir, MANIFEST_FILE)
+    if not os.path.exists(mf):
+        raise SystemExit(f"no {MANIFEST_FILE} in {fresh_dir!r} — run "
+                         "benchmarks/run.py first")
+    with open(mf) as f:
+        manifest = json.load(f)
+
+    rows, regressions = [], []
+    for name, entry in sorted(manifest.items()):
+        path = entry["metric"]
+        higher = entry["higher_is_better"]
+        fresh = float(entry["value"])
+        ref_file = os.path.join(ref_dir, entry["file"])
+        if not os.path.exists(ref_file):
+            rows.append((name, path, None, fresh, None, "no reference"))
+            continue
+        with open(ref_file) as f:
+            try:
+                ref = float(extract(json.load(f), path))
+            except (KeyError, IndexError, TypeError, ValueError):
+                rows.append((name, path, None, fresh, None,
+                             "reference lacks metric"))
+                continue
+        # degradation in the metric's good direction; guard zero refs
+        if ref == 0.0:
+            degr = 0.0 if fresh == ref else (1.0 if not higher else -1.0)
+        else:
+            degr = (ref - fresh) / ref if higher else (fresh - ref) / ref
+        status = "REGRESSED" if degr > threshold else "ok"
+        rows.append((name, path, ref, fresh, degr, status))
+        if degr > threshold:
+            regressions.append(name)
+    return rows, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=".",
+                    help="directory with the fresh run's manifest + BENCH "
+                         "files (default: cwd)")
+    ap.add_argument("--ref", required=True,
+                    help="directory with the committed reference "
+                         "BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated degradation of a headline ratio")
+    args = ap.parse_args(argv)
+
+    rows, regressions = compare(args.fresh, args.ref, args.threshold)
+
+    print(f"{'benchmark':<14s} {'headline':<36s} {'ref':>10s} "
+          f"{'fresh':>10s} {'delta':>8s}  status")
+    for name, path, ref, fresh, degr, status in rows:
+        ref_s = f"{ref:.4f}" if ref is not None else "-"
+        degr_s = f"{-degr:+.1%}" if degr is not None else "-"
+        print(f"{name:<14s} {path:<36s} {ref_s:>10s} {fresh:>10.4f} "
+              f"{degr_s:>8s}  {status}")
+    known_unrun = sorted(set(HEADLINES) - {r[0] for r in rows})
+    if known_unrun:
+        print(f"# not in this run's manifest (skipped): "
+              f"{', '.join(known_unrun)}")
+
+    if regressions:
+        print(f"\n# REGRESSION: {len(regressions)} headline(s) degraded "
+              f">{args.threshold:.0%}: {', '.join(regressions)}",
+              file=sys.stderr)
+        return 1
+    print(f"\n# all headlines within {args.threshold:.0%} of the committed "
+          "reference")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Benchmark manifest: which benchmark writes which file, and the one
+headline metric the CI regression check watches.
+
+``HEADLINES`` maps benchmark name → (output file, dotted path into its
+JSON, higher_is_better).  ``benchmarks/run.py`` writes
+``BENCH_manifest.json`` from it after a run (benchmark → file → realized
+headline value), and ``benchmarks/check_regression.py`` re-extracts the
+same path from the committed reference files — so neither CI nor the
+checker hardcodes file names.
+
+The headline is a RATIO (speedup, memory ratio, reduction factor) or a
+bounded fraction, not a raw wall-clock: CI machines are noisy, ratios of
+two timings taken on the same box mostly cancel the noise.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Optional
+
+# name → (file, dotted path — list indices as bare ints, higher_is_better)
+HEADLINES = {
+    "fl_engine": ("BENCH_fl_engine.json", "results.0.speedup", True),
+    "lora_path": ("BENCH_lora_path.json", "results.0.mem_ratio", True),
+    "cohort_shard": ("BENCH_cohort_shard.json",
+                     "results.0.device_mem_ratio_8dev", True),
+    "uplink": ("BENCH_uplink.json", "acceptance.int8_reduction_pftt", True),
+    "straggler": ("BENCH_straggler.json", "results.1.throughput_ratio",
+                  True),
+    "deadline": ("BENCH_deadline.json", "acceptance.sim_time_ratio", True),
+    "population": ("BENCH_population.json",
+                   "acceptance.host_overhead_frac", False),
+}
+
+MANIFEST_FILE = "BENCH_manifest.json"
+
+
+def extract(record: Dict, path: str):
+    """Resolve a dotted path (``results.0.speedup``) into a JSON record."""
+    cur = record
+    for part in path.split("."):
+        cur = cur[int(part)] if isinstance(cur, list) else cur[part]
+    return cur
+
+
+def headline_from_file(name: str, root: str = ".") -> Optional[Dict]:
+    """The benchmark's manifest entry, read back from its output file
+    (None when the file is missing or the path doesn't resolve — e.g. a
+    bench that wasn't selected this run)."""
+    import os
+    file, path, higher = HEADLINES[name]
+    fp = os.path.join(root, file)
+    if not os.path.exists(fp):
+        return None
+    with open(fp) as f:
+        record = json.load(f)
+    try:
+        value = extract(record, path)
+    except (KeyError, IndexError, TypeError):
+        return None
+    return {"file": file, "metric": path, "value": float(value),
+            "higher_is_better": higher}
+
+
+def write_manifest(root: str = ".", out: str = MANIFEST_FILE) -> Dict:
+    """Collect every resolvable headline into ``BENCH_manifest.json``."""
+    import os
+    entries = {}
+    for name in HEADLINES:
+        e = headline_from_file(name, root)
+        if e is not None:
+            entries[name] = e
+    with open(os.path.join(root, out), "w") as f:
+        json.dump(entries, f, indent=1)
+    return entries

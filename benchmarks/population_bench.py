@@ -1,0 +1,248 @@
+"""Population-scale FL: host orchestration cost + participation-skew cost.
+
+Four measurements around ``fl/population.py``:
+
+* **host overhead** — the acceptance pin: a 10k-client population with a
+  64-client sampled cohort runs fused PFTT rounds; the host work
+  population mode adds (sample + gather/overlay + scatter/global, timed
+  inside ``PopulationRunner``) must stay <20% of round wall-clock.  The
+  compiled round body is the same program a ``n_clients=64`` run
+  compiles, so everything population-specific is in that fraction.
+* **sampled-vs-standalone parity** — gather K rows from the store, run
+  the fused robust round, scatter back: the rows must match the same
+  clients run as a standalone K-client stack ≤1e-6 (same program, same
+  inputs — bitwise in practice).
+* **kill/resume** — a run killed after R/2 rounds and resumed from the
+  checkpoint (store npz + sampler-RNG/tracker sidecar) must reproduce
+  the uninterrupted run's accuracy and byte stream exactly.
+* **participation skew** — a diurnal availability-weighted 8-of-32
+  cohort vs the full-participation oracle (everyone trains every round)
+  on the same non-IID population: the accuracy gap is the cost of
+  sampling 25% participation, the regime the paper's cell serves.
+
+    PYTHONPATH=src python -m benchmarks.run --only population   # quick
+    FULL=1 PYTHONPATH=src python -m benchmarks.population_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+POP_N, COHORT_K = 10_000, 64
+
+
+def _pftt_kw(**over):
+    kw = dict(local_steps=3, batch=4, pretrain_steps=10,
+              samples_per_client=32, test_samples=8, d_model=32,
+              lora_rank=2, adapter_dim=4, seed=0, verbose=False)
+    kw.update(over)
+    return kw
+
+
+def _host_overhead(quick: bool) -> dict:
+    from repro.core.pftt import PFTTConfig, run_pftt
+    from repro.fl.population import PopulationConfig
+    from repro.wireless.scenarios import Scenario
+
+    rounds = 3 if quick else 8
+    pop = PopulationConfig(
+        population=POP_N, cohort_size=COHORT_K, sampler="availability",
+        scenario=Scenario(alpha=0.1, avail="diurnal", avail_period=24,
+                          mobility="waypoint", seed=1))
+    t0 = time.perf_counter()
+    res = run_pftt(PFTTConfig(population=pop, rounds=rounds,
+                              **_pftt_kw()))
+    wall = time.perf_counter() - t0
+    row = {
+        "population": POP_N, "cohort": COHORT_K, "rounds": rounds,
+        "host_overhead_frac": res["host_overhead_frac"],
+        "host_ms_per_round": 1e3 * res["host_s"] / rounds,
+        "round_ms": 1e3 * res["round_s"] / rounds,
+        "store_mb": res["store_bytes"] / 1e6,
+        "participation_frac": res["participation_frac"],
+        "final_acc": res["final_acc"],
+        "total_wall_s": wall,
+    }
+    print(f"population_host,{row['host_overhead_frac']:.4f},"
+          f"{POP_N} clients cohort {COHORT_K}: host "
+          f"{row['host_ms_per_round']:.1f}ms of "
+          f"{row['round_ms']:.1f}ms/round, store {row['store_mb']:.0f}MB")
+    return row
+
+
+def _parity() -> dict:
+    """Store gather → fused robust round → scatter vs the same clients as
+    a standalone cohort (the test asserts this too; the bench records the
+    realized error)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import trees
+    from repro.core.cohort import build_supervised_round
+    from repro.fl.population import ClientSampler, PopulationStore
+    from repro.optim import sgd
+
+    N, K = 256, 8
+
+    def loss_fn(tr, batch):
+        return jnp.mean((tr["shared"]["w"].sum() + tr["local"]["v"].sum()
+                         - batch["tgt"]) ** 2)
+
+    opt = sgd(1e-2)
+
+    def local_step(tr, op, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(tr, batch)
+        upd, op = opt.update(grads, op, tr)
+        return jax.tree_util.tree_map(lambda p, u: p + u, tr, upd), op, loss
+
+    rng = np.random.RandomState(0)
+    stacked = trees.stack(
+        [{"shared": {"w": rng.randn(3).astype(np.float32)},
+          "local": {"v": rng.randn(2).astype(np.float32)}}
+         for _ in range(N)])
+    opt0 = opt.init({"shared": {"w": jnp.zeros(3)},
+                     "local": {"v": jnp.zeros(2)}})
+    st_op = jax.tree_util.tree_map(
+        lambda l: np.broadcast_to(np.asarray(l), (N,) + np.shape(l)).copy(),
+        opt0)
+    pend = jax.tree_util.tree_map(
+        np.zeros_like, trees.select(stacked,
+                                    lambda p: p.startswith("shared")))
+    store = PopulationStore({"trainable": stacked, "opt": st_op,
+                             "pending": pend})
+    step = build_supervised_round(local_step,
+                                  lambda p: p.startswith("shared"),
+                                  donate=False, robust=True)
+    ids = ClientSampler("uniform", N, K, seed=5).sample()
+    batches = {"tgt": jnp.asarray(rng.randn(K, 2, 1), np.float32)}
+    ones, zeros = jnp.ones(K), jnp.zeros(K)
+    margs = (ones, ones, ones, zeros, ones)
+
+    dev = lambda slot: jax.tree_util.tree_map(
+        jnp.asarray, store.gather(slot, ids))
+    ref = step(dev("trainable"), dev("opt"), dev("pending"), batches,
+               *margs)
+    out = step(dev("trainable"), dev("opt"), dev("pending"), batches,
+               *margs)
+    store.scatter("trainable", ids, out[0])
+    store.scatter("pending", ids, out[2])
+
+    err = 0.0
+    for name, r in (("trainable", ref[0]), ("pending", ref[2])):
+        back = store.gather(name, ids)
+        for k, leaf in trees.flatten(r).items():
+            err = max(err, float(np.max(np.abs(
+                np.asarray(leaf) - trees.flatten(back)[k]))))
+    row = {"population": N, "cohort": K, "max_abs_err": err,
+           "passes_1e-6": bool(err <= 1e-6)}
+    print(f"population_parity,{err:.2e},sampled round vs standalone cohort")
+    return row
+
+
+def _kill_resume(tmpdir: str) -> dict:
+    from repro.core.pftt import PFTTConfig, run_pftt
+    from repro.fl.population import PopulationConfig
+    from repro.wireless.scenarios import Scenario
+
+    def cfg(ckpt=None, resume=False, rounds=4):
+        pop = PopulationConfig(
+            population=64, cohort_size=8, sampler="availability",
+            scenario=Scenario(alpha=0.1, avail="diurnal", avail_period=6,
+                              mobility="waypoint", seed=1))
+        return PFTTConfig(population=pop, rounds=rounds, ckpt_dir=ckpt,
+                          resume=resume, **_pftt_kw(local_steps=2))
+
+    full = run_pftt(cfg(rounds=4))
+    run_pftt(cfg(ckpt=tmpdir, rounds=2))          # "killed" after 2 rounds
+    res = run_pftt(cfg(ckpt=tmpdir, resume=True, rounds=4))
+    exact = (full["acc_per_round"] == res["acc_per_round"]
+             and full["total_bytes"] == res["total_bytes"])
+    row = {"rounds": 4, "killed_after": 2, "exact": bool(exact),
+           "acc_full": full["acc_per_round"],
+           "acc_resumed": res["acc_per_round"],
+           "bytes_full": float(full["total_bytes"]),
+           "bytes_resumed": float(res["total_bytes"])}
+    print(f"population_resume,{int(exact)},killed@2of4 "
+          f"accs {['%.3f' % a for a in res['acc_per_round']]}")
+    return row
+
+
+def _participation_skew(quick: bool) -> dict:
+    from repro.core.pftt import PFTTConfig, run_pftt
+    from repro.fl.population import PopulationConfig
+    from repro.wireless.scenarios import Scenario
+
+    N, K = 32, 8
+    rounds = 8 if quick else 16
+    noniid = dict(alpha=0.1, avail_period=6, seed=1)
+    sampled = run_pftt(PFTTConfig(
+        population=PopulationConfig(
+            population=N, cohort_size=K, sampler="availability",
+            scenario=Scenario(avail="diurnal", **noniid)),
+        rounds=rounds, **_pftt_kw()))
+    # full-participation oracle: the whole population is the cohort each
+    # round, same non-IID partition, no availability gating
+    oracle = run_pftt(PFTTConfig(
+        population=PopulationConfig(
+            population=N, cohort_size=N, sampler="uniform",
+            scenario=Scenario(**noniid)),
+        rounds=rounds, **_pftt_kw()))
+    row = {
+        "population": N, "cohort": K, "rounds": rounds,
+        "sampled_final_acc": sampled["final_acc"],
+        "oracle_final_acc": oracle["final_acc"],
+        "acc_delta": sampled["final_acc"] - oracle["final_acc"],
+        "sampled_participation": sampled["participation_frac"],
+        "bytes_ratio_oracle_over_sampled":
+            float(oracle["total_bytes"])
+            / max(float(sampled["total_bytes"]), 1.0),
+    }
+    print(f"population_skew,{row['acc_delta']:+.4f},"
+          f"{K}/{N} diurnal sampled acc {row['sampled_final_acc']:.3f} vs "
+          f"oracle {row['oracle_final_acc']:.3f} "
+          f"({row['bytes_ratio_oracle_over_sampled']:.1f}x the uplink)")
+    return row
+
+
+def main(quick: bool = True, out: str = "BENCH_population.json"):
+    import tempfile
+
+    host = _host_overhead(quick)
+    parity = _parity()
+    with tempfile.TemporaryDirectory() as td:
+        resume = _kill_resume(td)
+    skew = _participation_skew(quick)
+
+    accept = {
+        "host_overhead_frac": host["host_overhead_frac"],
+        "host_lt_20pct": bool(host["host_overhead_frac"] < 0.20),
+        "parity_max_abs_err": parity["max_abs_err"],
+        "parity_1e-6": parity["passes_1e-6"],
+        "resume_exact": resume["exact"],
+    }
+    for k, v in accept.items():
+        print(f"# accept[{k}] = {v}")
+
+    record = {"profile": "quick" if quick else "full",
+              "workload": f"PFTT population mode: {POP_N}-client host "
+                          f"store (reduced roberta d32 rank-2 adapters), "
+                          f"{COHORT_K}-client availability-weighted "
+                          "cohorts through the fused robust round; "
+                          "parity/resume/skew on small populations",
+              "host_overhead": host,
+              "parity": parity,
+              "kill_resume": resume,
+              "participation_skew": skew,
+              "acceptance": accept}
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {out}")
+    return record
+
+
+if __name__ == "__main__":
+    main(quick=not bool(os.environ.get("FULL")))

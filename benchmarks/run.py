@@ -6,9 +6,12 @@
 Default is the quick profile (CI-friendly); ``--full`` (or env FULL=1) runs
 the paper's 40-round simulations.  ``--only`` takes a comma-separated
 subset.  Prints ``name,us_per_call,derived`` CSV blocks plus the per-figure
-summaries.  A benchmark that raises is reported (traceback + summary line)
-and the process exits nonzero after the remaining selections finish — no
-silent failures in CI.
+summaries, then a per-benchmark wall-time table, and writes
+``BENCH_manifest.json`` (benchmark → output file → headline metric, from
+``benchmarks/manifest.py``) for the CI regression check
+(``benchmarks/check_regression.py``).  A benchmark that raises is reported
+(traceback + summary line) and the process exits nonzero after the
+remaining selections finish — no silent failures in CI.
 """
 import argparse
 import os
@@ -60,6 +63,11 @@ def _benches():
         from benchmarks import deadline_bench
         deadline_bench.main(quick=quick, out="BENCH_deadline.json")
 
+    def population(quick):
+        print("\n# === population-scale FL: 10k-client store, sampled cohorts ===")
+        from benchmarks import population_bench
+        population_bench.main(quick=quick, out="BENCH_population.json")
+
     def fig5(quick):
         print("\n# === Fig. 5: PFTT accuracy / communication ===")
         from benchmarks import fig5_pftt
@@ -83,6 +91,7 @@ def _benches():
             "uplink": uplink,
             "straggler": straggler,
             "deadline": deadline,
+            "population": population,
             "fig5": fig5,
             "fig4": fig4,
             "roofline": lambda quick: roofline()}
@@ -111,15 +120,30 @@ def main() -> None:
 
     t0 = time.time()
     failures = []
+    timings = []
     for name in selected:
+        tb = time.time()
         try:
             benches[name](quick)
         except Exception:
             traceback.print_exc()
             failures.append(name)
             print(f"# BENCHMARK FAILED: {name} (continuing)", file=sys.stderr)
+        timings.append((name, time.time() - tb))
 
-    print(f"\n# total {time.time()-t0:.0f}s (quick={quick})")
+    print(f"\n# per-benchmark wall time:")
+    for name, dt in timings:
+        print(f"#   {name:<14s} {dt:7.1f}s"
+              + ("  [FAILED]" if name in failures else ""))
+    print(f"# total {time.time()-t0:.0f}s (quick={quick})")
+
+    # benchmark → output file → headline metric, so the CI regression
+    # check never hardcodes file names (benchmarks/check_regression.py)
+    from benchmarks.manifest import MANIFEST_FILE, write_manifest
+    entries = write_manifest()
+    print(f"# wrote {MANIFEST_FILE} "
+          f"({', '.join(entries) if entries else 'no headline files found'})")
+
     if failures:
         print(f"# FAILED benchmarks: {','.join(failures)}", file=sys.stderr)
         sys.exit(1)

@@ -48,8 +48,8 @@ from repro.configs import get_config
 from repro.core.aggregation import (factored_fedavg_stacked, fedavg,
                                     fedavg_stacked, masked_fedavg,
                                     masked_fedavg_stacked)
-from repro.core.cohort import (HostBatchStacker, build_ppo_round,
-                               build_supervised_round)
+from repro.core.cohort import (HostBatchStacker, build_cohort_eval,
+                               build_ppo_round, build_supervised_round)
 from repro.core.robust import StalenessConfig, StalenessTracker
 from repro.core.rewards import ClientPreference, DoubleReward
 from repro.data.partition import client_topic_preferences
@@ -107,6 +107,11 @@ class PFITConfig:
                                    # (wireless/arrivals.py); inert/None is
                                    # bitwise the round-granular runtime
     ppo: PPOConfig = PPOConfig()
+    population: Optional[object] = None  # fl.population.PopulationConfig —
+                                   # sampled-cohort population mode
+                                   # (shepherd only; PPO methods carry full
+                                   # per-client params, which don't fit the
+                                   # KB-per-client population regime)
 
 
 def _method_settings(cfg: PFITConfig):
@@ -149,8 +154,12 @@ def _pretrain_policy(key, model, params, corpus, steps, lr, batch, verbose):
 
 def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
     """``mesh`` (optional ``jax.sharding.Mesh``): shard the fused cohort
-    round across it (engine path only) — see the module docstring."""
+    round across it (engine path only) — see the module docstring.
+    ``cfg.population`` switches to sampled-cohort population mode
+    (shepherd only)."""
     assert cfg.method in METHODS
+    if cfg.population is not None:
+        return _run_pfit_population(cfg, mesh, client_axes)
     ms = _method_settings(cfg)
     key = jax.random.PRNGKey(cfg.seed)
     rng = np.random.RandomState(cfg.seed)
@@ -693,4 +702,200 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
         "uplink_codec": cfg.uplink_codec,
         "rm_pair_acc": {"help": rmh_stats["pair_acc"],
                         "safe": rms_stats["pair_acc"]},
+    }
+
+
+def _run_pfit_population(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
+    """Sampled-cohort population mode for the shepherd baseline: a
+    ``PopulationStore`` of per-client LoRA/opt/pending trees over
+    ``population`` clients, per-round sampling + gather/scatter around the
+    SAME fused supervised round body, the ``StalenessTracker`` spanning the
+    population.  Non-IID here means per-client TOPIC skew (the scenario's
+    Dirichlet draw is over the instruction corpus's ``N_TOPICS``).  PPO
+    methods are rejected: they train full per-client parameter trees, which
+    don't fit the KB-per-client regime that makes a 10k-client host store
+    viable — that's exactly what shepherd's rank-r factors buy."""
+    from repro.fl.population import (ClientSampler, PopulationData,
+                                     PopulationRunner, PopulationStore,
+                                     stacked_client_init)
+    from repro.wireless.scenarios import Scenario
+
+    pop = cfg.population
+    if cfg.method != "shepherd":
+        raise ValueError(
+            "population mode supports the shepherd (supervised LoRA) "
+            f"method only, not {cfg.method!r}: PPO methods carry full "
+            "per-client parameter trees, which don't fit the "
+            "KB-per-client population regime")
+    if not cfg.engine:
+        raise ValueError("population mode runs the fused engine only")
+    N, K = pop.population, pop.cohort_size
+    scen = pop.scenario or Scenario(n_classes=N_TOPICS)
+    if scen.n_classes != N_TOPICS:
+        raise ValueError(f"pfit population scenarios partition over the "
+                         f"instruction corpus's {N_TOPICS} topics; got "
+                         f"n_classes={scen.n_classes}")
+
+    key = jax.random.PRNGKey(cfg.seed)
+    rng = np.random.RandomState(cfg.seed)
+    meshctx = MeshCtx.single_device()
+    mcfg = get_config("gpt2-small").reduced(d_model=cfg.d_model,
+                                            repeats=cfg.n_layers)
+    model = Model(mcfg, meshctx=meshctx)
+    corpus = InstructionCorpus(seq_len=cfg.prompt_len + cfg.gen_len,
+                               prompt_len=cfg.prompt_len, seed=cfg.seed)
+    params = model.init(key)
+    params = _pretrain_policy(key, model, params, corpus, cfg.pretrain_steps,
+                              cfg.pretrain_lr, 16, cfg.verbose)
+    global_params = params
+
+    strace = scen.realize(N, cfg.rounds)
+    pool_n = int(np.clip(cfg.rollout_batch * 64, 512, 4096))
+    pool = corpus.sample(pool_n, helpful_p=0.9, unsafe_p=0.05, rng=rng)
+    data = PopulationData(pool, strace.class_probs, seed=cfg.seed,
+                          label_key="topic")
+
+    peft_cfg = peft_mod.PEFTConfig(lora_rank=cfg.lora_rank,
+                                   lora_targets=("mixer/wq", "mixer/wv"))
+    lscale = peft_mod.lora_scale(peft_cfg)
+    opt = adamw(cfg.lr)
+    upload_pred = lambda p: True            # shepherd uploads the whole LoRA
+
+    def client_init(ck):
+        lora = peft_mod.init_lora(ck, params, peft_cfg)
+        return {"t": lora, "o": opt.init(lora)}
+
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, 200 + i))(
+        jnp.arange(N))
+    stacked = stacked_client_init(client_init, keys)
+    pend_np = jax.tree_util.tree_map(np.zeros_like, stacked["t"])
+    store = PopulationStore({"trainable": stacked["t"], "opt": stacked["o"],
+                             "pending": pend_np})
+    lora0 = store.row("trainable", 0)
+    global_shared = jax.tree_util.tree_map(np.array, lora0)
+
+    channel = RayleighChannel(mean_snr_db=cfg.snr_db, seed=cfg.seed)
+    budget = ChannelBudget(channel, tx_power_w=cfg.tx_power_w)
+    ledger = CommLedger()
+    dl = cfg.deadline if (cfg.deadline is not None
+                          and not cfg.deadline.is_inert()) else None
+    trace = (cfg.fault_plan or FaultPlan()).realize(N, cfg.rounds)
+    arrivals = ArrivalModel(channel, dl, N) if dl is not None else None
+    tracker = StalenessTracker(N, StalenessConfig(
+        alpha=cfg.staleness_alpha, a=cfg.staleness_a,
+        max_staleness=cfg.max_staleness), deadline=dl, arrivals=arrivals)
+    codec = get_codec(cfg.uplink_codec)
+    codec_key = None if codec is None else jax.random.fold_in(key, 0x0C0DEC)
+    payload_bits = tree_bytes(lora0) * 8
+    est_bits = None
+    if dl is not None:
+        est_bits = np.full(N, payload_bits if codec is None else
+                           codec_mod.payload_bits_upper_bound(codec, lora0),
+                           np.float64)
+
+    def shepherd_local_step(lora, opt_state, batch):
+        def loss_fn(lo):
+            if cfg.factored:
+                return model.lm_loss(global_params, batch, lora=lo,
+                                     lora_scale=lscale)
+            eff = peft_mod.apply_lora(global_params, lo, peft_cfg)
+            return model.lm_loss(eff, batch)
+        loss, g = jax.value_and_grad(loss_fn)(lora)
+        upd, opt_state = opt.update(g, opt_state, lora)
+        return trees.tree_add(lora, upd), opt_state, loss
+
+    cs = cohort_sharding(mesh, K, client_axes) if mesh is not None else None
+    round_step = build_supervised_round(
+        shepherd_local_step,
+        mesh=cs.mesh if cs is not None else None,
+        client_axes=cs.axes if cs is not None else None,
+        codec=codec, factored_agg=cfg.factored_agg, robust=True,
+        min_quorum=(dl.min_quorum if dl is not None else 0))
+    stacker = HostBatchStacker(sharding=cs.named if cs is not None else None)
+
+    runner = PopulationRunner(
+        pop=pop, store=store, global_shared=global_shared,
+        upload_pred=upload_pred, channel=channel, budget=budget,
+        ledger=ledger, tracker=tracker, trace=trace, strace=strace,
+        sampler=ClientSampler(pop.sampler, N, K,
+                              seed=cfg.seed + 1000 * pop.seed),
+        arrivals=arrivals, dl=dl, cs=cs, est_bits=est_bits)
+
+    def _lm_batch(b):
+        return {"tokens": b["tokens"][:, :-1], "labels": b["tokens"][:, 1:],
+                "mask": b["mask"][:, 1:]}
+
+    def draw(cid, rnd):
+        return [_lm_batch(b) for b in data.round_batches(
+            cid, rnd, cfg.shepherd_steps, cfg.rollout_batch)]
+
+    # ---- cohort eval: per-client LM loss on a held-out topical draw, one
+    # fused dispatch per round (generation+reward eval stays in cohort mode
+    # — it is per-client-sequential and would dominate a population run)
+    n_rows = cs.total if cs is not None else K
+    n_eval = min(2 * cfg.rollout_batch, 64)
+    seq = corpus.seq_len - 1
+    e_toks = np.zeros((n_rows, n_eval, seq), np.int32)
+    e_labels = np.zeros((n_rows, n_eval, seq), np.int32)
+    e_mask = np.zeros((n_rows, n_eval, seq), np.float32)
+    _put = (lambda x: jax.device_put(x, cs.named)) if cs is not None \
+        else jnp.asarray
+
+    def eval_client(lora, tokens, labels, mask):
+        batch = {"tokens": tokens, "labels": labels, "mask": mask}
+        if cfg.factored:
+            return model.lm_loss(global_params, batch, lora=lora,
+                                 lora_scale=lscale)
+        eff = peft_mod.apply_lora(global_params, lora, peft_cfg)
+        return model.lm_loss(eff, batch)
+
+    eval_cohort = build_cohort_eval(
+        eval_client, sharding=cs.named if cs is not None else None)
+    test_cache: Dict[int, Dict] = {}
+
+    def eval_ids(cohort_tr, ids):
+        if len(test_cache) > 4096:
+            test_cache.clear()
+        for j, cid in enumerate(ids):
+            te = test_cache.get(int(cid))
+            if te is None:
+                te = _lm_batch(data.test_set(int(cid), n_eval))
+                test_cache[int(cid)] = te
+            e_toks[j], e_labels[j], e_mask[j] = \
+                te["tokens"], te["labels"], te["mask"]
+        losses = eval_cohort(cohort_tr, _put(e_toks), _put(e_labels),
+                             _put(e_mask))
+        return [float(l) for l in np.asarray(losses)[:len(ids)]]
+
+    loss_per_round: List[float] = []
+    for rnd in range(cfg.rounds):
+        out = runner.run_round(rnd, round_step=round_step, stacker=stacker,
+                               draw_batches=draw,
+                               local_steps=cfg.shepherd_steps,
+                               payload_bits=payload_bits,
+                               codec_key=codec_key)
+        loss_per_round.append(
+            float(np.mean(eval_ids(out["cohort_tr"], out["ids"]))))
+        if cfg.verbose:
+            print(f"[pfit-pop:shepherd] round {rnd} "
+                  f"cohort lm-loss {loss_per_round[-1]:.4f}")
+
+    return {
+        "method": cfg.method,
+        "eval_loss_per_round": loss_per_round,
+        "final_eval_loss": loss_per_round[-1] if loss_per_round else 0.0,
+        "mean_round_bytes": ledger.mean_round_bytes,
+        "mean_round_delay_s": ledger.mean_round_delay,
+        "total_bytes": ledger.total_bytes,
+        "total_energy_j": ledger.total_energy_j,
+        "total_sim_time_s": ledger.total_sim_time_s,
+        "quorum_noops": ledger.quorum_noops,
+        "uplink_codec": cfg.uplink_codec,
+        "population": N,
+        "cohort_size": K,
+        "sampler": pop.sampler,
+        "scenario": scen.to_dict(),
+        "participation_frac": float(runner.seen.mean()),
+        "host_overhead_frac": runner.host_overhead_frac,
+        "store_bytes": store.nbytes(),
     }

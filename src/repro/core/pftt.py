@@ -131,6 +131,12 @@ class PFTTConfig:
     ckpt_dir: Optional[str] = None # save the stacked round state per round
                                    # (engine path) for kill + --resume
     resume: bool = False           # restart from ckpt_dir's last round
+    population: Optional[object] = None  # fl.population.PopulationConfig —
+                                   # population mode: n_clients becomes the
+                                   # host-resident population and every
+                                   # round samples a cohort_size cohort
+                                   # (fused body unchanged; see
+                                   # _run_pftt_population)
 
 
 def _upload_pred(method: str):
@@ -188,13 +194,11 @@ def _merge_trainable(method: str, base_params, trainable, peft_cfg):
     return full
 
 
-def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
-    """``mesh`` (optional ``jax.sharding.Mesh``): shard the fused cohort
-    round across it — see the module docstring.  ``client_axes`` overrides
-    which mesh axes carry the client dim (default: every non-"model" axis).
-    Ragged cohorts run the same fused (and sharded) round via
-    pad-and-mask."""
-    assert cfg.method in METHODS, cfg.method
+def _setup_backbone(cfg: PFTTConfig):
+    """Shared model setup: reduced roberta, MLM pretrain over all topics,
+    PEFT insertion.  Both the cohort path (``run_pftt``) and the population
+    path consume it, so their backbones (and the host RNG stream handed
+    back) are identical."""
     rng = np.random.RandomState(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     meshctx = MeshCtx.single_device()
@@ -242,6 +246,21 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
     use_lora = cfg.method in ("pftt", "vanilla_fl", "fedlora")
     params = peft_mod.init_adapters(key, base, mcfg, peft_cfg) \
         if use_adapters else base
+    return model, mcfg, params, peft_cfg, corpus, key, rng, use_lora
+
+
+def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
+    """``mesh`` (optional ``jax.sharding.Mesh``): shard the fused cohort
+    round across it — see the module docstring.  ``client_axes`` overrides
+    which mesh axes carry the client dim (default: every non-"model" axis).
+    Ragged cohorts run the same fused (and sharded) round via
+    pad-and-mask.  ``cfg.population`` switches to sampled-cohort population
+    mode (``_run_pftt_population``)."""
+    assert cfg.method in METHODS, cfg.method
+    if cfg.population is not None:
+        return _run_pftt_population(cfg, mesh, client_axes)
+    model, mcfg, params, peft_cfg, corpus, key, rng, use_lora = \
+        _setup_backbone(cfg)
 
     # ---- non-IID client data (Dirichlet over labels, paper §V-B.2)
     all_data = corpus.sample(cfg.samples_per_client * cfg.n_clients, rng=rng)
@@ -663,4 +682,228 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         "eval_dispatches_per_round": eval_dispatches[0] / max(cfg.rounds, 1),
         "fused_engine": bool(use_engine),
         "ragged_cohort": len(set(client_batch_sizes)) > 1,
+    }
+
+
+def _run_pftt_population(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
+    """Sampled-cohort population mode (``cfg.population``): the host holds
+    a ``PopulationStore`` of per-client adapter/opt/pending trees sized to
+    ``population`` clients; every round a ``ClientSampler`` draws a
+    ``cohort_size`` cohort, the ``PopulationRunner`` gathers the sampled
+    rows (overlaying the server's global into the uploaded subtree — the
+    downlink), the SAME fused robust round body that a
+    ``n_clients=cohort_size`` run compiles executes once, and results
+    scatter back.  The ``StalenessTracker`` spans the population, so a
+    straggler's pending payload survives rounds it isn't sampled in.
+    Non-IID data / availability / mobility come from the
+    ``wireless.scenarios.Scenario`` trace; an injected ``FaultPlan`` and a
+    ``DeadlineConfig`` compose on top exactly as in cohort mode."""
+    from repro.fl.population import (ClientSampler, PopulationData,
+                                     PopulationRunner, PopulationStore,
+                                     stacked_client_init)
+    from repro.wireless.scenarios import Scenario
+
+    pop = cfg.population
+    if not cfg.engine:
+        raise ValueError("population mode runs the fused engine only "
+                         "(PFTTConfig(engine=True))")
+    N, K = pop.population, pop.cohort_size
+    scen = pop.scenario or Scenario()
+    if scen.n_classes != 4:
+        raise ValueError("the PFTT classification task is 4-class; "
+                         f"scenario has n_classes={scen.n_classes}")
+    model, mcfg, params, peft_cfg, corpus, key, rng, use_lora = \
+        _setup_backbone(cfg)
+    strace = scen.realize(N, cfg.rounds)
+
+    # ---- shared class-bucketed pool; clients draw lazily from their
+    # Dirichlet label distribution (no per-client iterator state → nothing
+    # to replay on resume)
+    pool_n = int(np.clip(cfg.samples_per_client * 16, 1024, 16384))
+    pool = corpus.sample(pool_n, rng=rng)
+    data = PopulationData(pool, strace.class_probs, seed=cfg.seed)
+
+    # ---- the N-client store: ONE vmapped init over folded keys (constant
+    # leaves broadcast), pulled to host numpy
+    opt = adamw(cfg.lr, update_mask=lambda p: not p.endswith("/mask"))
+    upload_pred = _upload_pred(cfg.method)
+
+    def client_init(ck):
+        lora = peft_mod.init_lora(ck, params, peft_cfg) if use_lora else None
+        t = _build_trainable(cfg.method, params, lora)
+        return {"t": t, "o": opt.init(t)}
+
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, 100 + i))(
+        jnp.arange(N))
+    stacked = stacked_client_init(client_init, keys)
+    pend_np = jax.tree_util.tree_map(
+        np.zeros_like, trees.select(stacked["t"], upload_pred))
+    store = PopulationStore({"trainable": stacked["t"], "opt": stacked["o"],
+                             "pending": pend_np})
+    shared0 = trees.select(store.row("trainable", 0), upload_pred)
+    global_shared = jax.tree_util.tree_map(np.array, shared0)
+
+    # ---- wireless runtime over the POPULATION (channel draws, fault
+    # trace, staleness tracker, optional continuous-time deadline)
+    channel = RayleighChannel(mean_snr_db=cfg.snr_db, seed=cfg.seed)
+    budget = ChannelBudget(channel, tx_power_w=cfg.tx_power_w)
+    ledger = CommLedger()
+    dl = cfg.deadline if (cfg.deadline is not None
+                          and not cfg.deadline.is_inert()) else None
+    trace = (cfg.fault_plan or FaultPlan()).realize(N, cfg.rounds)
+    arrivals = ArrivalModel(channel, dl, N) if dl is not None else None
+    tracker = StalenessTracker(N, StalenessConfig(
+        alpha=cfg.staleness_alpha, a=cfg.staleness_a,
+        max_staleness=cfg.max_staleness), deadline=dl, arrivals=arrivals)
+    codec = get_codec(cfg.uplink_codec)
+    codec_key = None if codec is None else jax.random.fold_in(key, 0x0C0DEC)
+    ab = 0.0 if cfg.method != "fedbert" else \
+        cfg.local_steps * cfg.batch * cfg.seq_len * cfg.d_model * 4 * 2 * 8
+    payload_bits = tree_bytes(shared0) * 8 + ab
+    est_bits = None
+    if dl is not None:
+        est_bits = np.full(N, payload_bits if codec is None else
+                           codec_mod.payload_bits_upper_bound(codec, shared0)
+                           + ab, np.float64)
+
+    # ---- the fused round body: identical to a cohort_size-client robust
+    # run (population mode changes NOTHING below the host orchestration)
+    frozen = params
+    scale = peft_mod.lora_scale(peft_cfg)
+
+    def _effective(t):
+        if cfg.factored:
+            full, lora = _split_trainable(cfg.method, frozen, t)
+            return full, lora, scale
+        return _merge_trainable(cfg.method, frozen, t, peft_cfg), None, 1.0
+
+    def local_step(trainable, opt_state, batch):
+        def loss_fn(t):
+            full, lora, ls = _effective(t)
+            return model.cls_loss(full, batch, lora=lora, lora_scale=ls)[0]
+        loss, g = jax.value_and_grad(loss_fn)(trainable)
+        upd, opt_state = opt.update(g, opt_state, trainable)
+        return trees.tree_add(trainable, upd), opt_state, loss
+
+    cs = cohort_sharding(mesh, K, client_axes) if mesh is not None else None
+    round_step = build_supervised_round(
+        local_step, upload_pred,
+        mesh=cs.mesh if cs is not None else None,
+        client_axes=cs.axes if cs is not None else None,
+        codec=codec, factored_agg=cfg.factored_agg, robust=True,
+        min_quorum=(dl.min_quorum if dl is not None else 0))
+    stacker = HostBatchStacker(sharding=cs.named if cs is not None else None)
+
+    runner = PopulationRunner(
+        pop=pop, store=store, global_shared=global_shared,
+        upload_pred=upload_pred, channel=channel, budget=budget,
+        ledger=ledger, tracker=tracker, trace=trace, strace=strace,
+        sampler=ClientSampler(pop.sampler, N, K,
+                              seed=cfg.seed + 1000 * pop.seed),
+        arrivals=arrivals, dl=dl, cs=cs, est_bits=est_bits, act_bits=ab)
+
+    # ---- cohort eval: the sampled clients' held-out draws refill one
+    # preallocated buffer and score in ONE fused dispatch per round
+    n_rows = cs.total if cs is not None else K
+    n_eval = int(min(max(cfg.test_samples, 4), 64))
+    e_toks = np.zeros((n_rows, n_eval, cfg.seq_len), np.int32)
+    e_labels = np.zeros((n_rows, n_eval), np.int32)
+    e_valid = np.zeros((n_rows, n_eval), np.float32)
+    _put = (lambda x: jax.device_put(x, cs.named)) if cs is not None \
+        else jnp.asarray
+
+    def eval_client(trainable, tokens, label, valid):
+        full, lora, ls = _effective(trainable)
+        hidden, _ = model.forward(full, tokens, lora=lora, lora_scale=ls)
+        pred = (hidden[:, 0] @ full["cls_head"]).astype(jnp.float32).argmax(-1)
+        correct = (pred == label).astype(jnp.float32) * valid
+        return correct.sum(), valid.sum()
+
+    eval_cohort = build_cohort_eval(
+        eval_client, sharding=cs.named if cs is not None else None)
+    test_cache: Dict[int, Dict] = {}
+
+    def eval_ids(cohort_tr, ids):
+        if len(test_cache) > 4096:
+            test_cache.clear()
+        for j, cid in enumerate(ids):
+            te = test_cache.get(int(cid))
+            if te is None:
+                te = data.test_set(int(cid), n_eval)
+                test_cache[int(cid)] = te
+            e_toks[j], e_labels[j], e_valid[j] = \
+                te["tokens"], te["label"], 1.0
+        e_valid[len(ids):] = 0.0
+        corr, cnt = eval_cohort(cohort_tr, _put(e_toks), _put(e_labels),
+                                _put(e_valid))
+        corr, cnt = np.asarray(corr), np.asarray(cnt)
+        return [float(c / n)
+                for c, n in zip(corr[:len(ids)], cnt[:len(ids)]) if n > 0]
+
+    def draw(cid, rnd):
+        return data.round_batches(cid, rnd, cfg.local_steps, cfg.batch)
+
+    # ---- checkpoint/resume: store + global in the npz, sampler RNG /
+    # tracker / flags in the JSON sidecar; channel + arrival draws burn
+    accs_per_round: List[float] = []
+    ckpt_file = meta_file = None
+    start_round = 0
+    if cfg.ckpt_dir:
+        ckpt_file = os.path.join(cfg.ckpt_dir, f"pftt_pop_{cfg.method}.npz")
+        meta_file = os.path.join(cfg.ckpt_dir, f"pftt_pop_{cfg.method}.json")
+        if cfg.resume and os.path.exists(meta_file):
+            with open(meta_file) as f:
+                meta = json.load(f)
+            start_round = int(meta["next_round"])
+            accs_per_round[:] = meta["accs_per_round"]
+            ledger.rounds[:] = meta["ledger_rounds"]
+            runner.load_state_dict(meta["runner"])
+            runner.load_checkpoint_tree(
+                load_checkpoint(ckpt_file, runner.checkpoint_tree()))
+            runner.burn_rounds(start_round)
+
+    for rnd in range(start_round, cfg.rounds):
+        out = runner.run_round(rnd, round_step=round_step, stacker=stacker,
+                               draw_batches=draw,
+                               local_steps=cfg.local_steps,
+                               payload_bits=payload_bits,
+                               codec_key=codec_key)
+        accs = eval_ids(out["cohort_tr"], out["ids"])
+        accs_per_round.append(float(np.mean(accs)) if accs else 0.0)
+        if ckpt_file is not None:
+            save_checkpoint(ckpt_file, runner.checkpoint_tree())
+            meta = {"next_round": rnd + 1,
+                    "accs_per_round": accs_per_round,
+                    "ledger_rounds": ledger.rounds,
+                    "runner": runner.state_dict()}
+            with open(meta_file, "w") as f:
+                json.dump(meta, f)
+        if cfg.verbose and rnd % 5 == 0:
+            print(f"[pftt-pop:{cfg.method}] round {rnd} "
+                  f"cohort acc {accs_per_round[-1]:.3f} "
+                  f"sampled {sorted(int(i) for i in out['ids'])[:8]}… "
+                  f"host {runner.host_overhead_frac:.1%}")
+
+    return {
+        "method": cfg.method,
+        "acc_per_round": accs_per_round,
+        "final_acc": accs_per_round[-1] if accs_per_round else 0.0,
+        "mean_round_bytes": ledger.mean_round_bytes,
+        "mean_round_delay_s": ledger.mean_round_delay,
+        "total_bytes": ledger.total_bytes,
+        "total_energy_j": ledger.total_energy_j,
+        "total_sim_time_s": ledger.total_sim_time_s,
+        "quorum_noops": ledger.quorum_noops,
+        "round_records": ledger.rounds,
+        "uplink_codec": cfg.uplink_codec,
+        "fused_engine": True,
+        "population": N,
+        "cohort_size": K,
+        "sampler": pop.sampler,
+        "scenario": scen.to_dict(),
+        "participation_frac": float(runner.seen.mean()),
+        "host_overhead_frac": runner.host_overhead_frac,
+        "host_s": runner.host_s,
+        "round_s": runner.round_s,
+        "store_bytes": store.nbytes(),
     }

@@ -1,3 +1,6 @@
 from repro.fl.client import FLClient  # noqa: F401
 from repro.fl.server import FLServer  # noqa: F401
 from repro.fl.rounds import run_rounds  # noqa: F401
+from repro.fl.population import (  # noqa: F401
+    ClientSampler, PopulationConfig, PopulationData, PopulationRunner,
+    PopulationStore)

@@ -14,6 +14,18 @@ apply; ``--batch``/``--lr``/``--fl-rounds`` do):
         python -m repro.launch.train --arch roberta-base --fl-clients 8 \
         --fl-rounds 3
 
+``--population N --cohort K`` (roberta-base) switches PFTT to
+population mode: the host holds N clients' adapter/opt trees
+(``fl.population.PopulationStore``) and every round a seeded sampler
+draws a K-client cohort into the SAME fused round the ``--fl-clients K``
+run compiles.  ``--scenario`` adds non-IID data / availability /
+mobility (``wireless.scenarios``); fault plans, deadlines, codecs, and
+checkpointing compose unchanged:
+
+    PYTHONPATH=src python -m repro.launch.train --arch roberta-base \
+        --population 256 --cohort 8 --fl-rounds 2 \
+        --scenario alpha=0.1,avail=diurnal --sampler availability
+
 Any other ``--arch`` runs the universal fused round on that architecture
 (``core/arch_round.py``): a ragged LoRA cohort trained through ONE fused
 dispatch per round with the frozen base replicated and only the rank-r
@@ -89,6 +101,23 @@ def main():
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="retransmit failed uploads for up to this many "
                          "rounds (0 = synchronous drop-on-failure)")
+    ap.add_argument("--population", type=int, default=0,
+                    help="population mode (roberta-base): the host holds "
+                         "this many clients' adapter/opt trees and every "
+                         "round samples a --cohort cohort into the fused "
+                         "round (fl.population; 0 → off)")
+    ap.add_argument("--cohort", type=int, default=8,
+                    help="population mode: sampled cohort size per round")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "availability"],
+                    help="population mode: per-round client sampler "
+                         "(availability weights by the scenario's "
+                         "avail_p trace)")
+    ap.add_argument("--scenario", default=None,
+                    help="population scenario spec: 'k=v,...' "
+                         "(alpha/avail/avail_period/mobility/seed/... — "
+                         "wireless.scenarios.Scenario.from_spec) or a JSON "
+                         "file path")
     ap.add_argument("--ckpt-dir", default=None,
                     help="FL engine: save the stacked round state each round "
                          "here so a killed run can --resume")
@@ -107,6 +136,9 @@ def main():
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
+    if args.population and args.arch != "roberta-base":
+        raise SystemExit("--population runs the PFTT workload: "
+                         "use --arch roberta-base")
     if args.fl_clients and args.arch != "roberta-base":
         from repro.core.arch_round import ArchRoundConfig, run_arch_round
         print(f"universal fused round: --arch {args.arch}, "
@@ -134,7 +166,7 @@ def main():
             print("fused path asserted: factored, one dispatch, "
                   "oracle parity OK")
         return
-    if args.fl_clients:
+    if args.fl_clients or args.population:
         import math
 
         from repro.core.pftt import PFTTConfig, run_pftt
@@ -148,10 +180,23 @@ def main():
                 backoff_base_s=args.backoff_base_s,
                 max_retries=args.max_retries, min_quorum=args.min_quorum,
                 compute_mean_s=args.compute_time_s)
-        print(f"federated cohort demo (PFTT reduced-roberta workload; "
-              f"--steps/--seq ignored) on {n_dev} device(s)")
+        population = None
+        if args.population:
+            from repro.fl.population import PopulationConfig
+            from repro.wireless.scenarios import Scenario
+            population = PopulationConfig(
+                population=args.population, cohort_size=args.cohort,
+                sampler=args.sampler,
+                scenario=Scenario.from_spec(args.scenario))
+            print(f"population PFTT: {args.population} clients, "
+                  f"cohort {args.cohort}/round ({args.sampler} sampling) "
+                  f"on {n_dev} device(s)")
+        else:
+            print(f"federated cohort demo (PFTT reduced-roberta workload; "
+                  f"--steps/--seq ignored) on {n_dev} device(s)")
         mesh = jax.make_mesh((n_dev,), ("data",))
-        cfg = PFTTConfig(n_clients=args.fl_clients, rounds=args.fl_rounds,
+        cfg = PFTTConfig(n_clients=args.fl_clients or args.cohort,
+                         rounds=args.fl_rounds,
                          batch=args.batch, lr=args.lr, local_steps=5,
                          pretrain_steps=50, samples_per_client=200,
                          uplink_codec=args.uplink_codec,
@@ -159,7 +204,7 @@ def main():
                          fault_plan=FaultPlan.from_spec(args.fault_plan),
                          staleness_a=args.staleness_a,
                          max_staleness=args.max_staleness,
-                         deadline=deadline,
+                         deadline=deadline, population=population,
                          ckpt_dir=args.ckpt_dir, resume=args.resume,
                          verbose=True)
         res = run_pftt(cfg, mesh=mesh, client_axes=("data",))
@@ -169,6 +214,11 @@ def main():
               f"(codec={args.uplink_codec}) mean round delay "
               f"{res['mean_round_delay_s']:.3f}s energy "
               f"{res['total_energy_j']:.2f}J")
+        if population is not None:
+            print(f"population: sampled {res['participation_frac']:.1%} of "
+                  f"{res['population']} clients, host overhead "
+                  f"{res['host_overhead_frac']:.1%} of round wall-clock, "
+                  f"store {res['store_bytes'] / 1e6:.1f}MB")
         if deadline is not None:
             print(f"continuous-time round: sim time "
                   f"{res['total_sim_time_s']:.1f}s quorum no-ops "

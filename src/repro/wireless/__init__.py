@@ -2,3 +2,4 @@ from repro.wireless.channel import RayleighChannel, ChannelReport  # noqa: F401
 from repro.wireless.cost import CommLedger, tree_bytes  # noqa: F401
 from repro.wireless.faults import FaultPlan, FaultTrace, RoundFaults  # noqa: F401
 from repro.wireless.arrivals import ArrivalModel, DeadlineConfig  # noqa: F401
+from repro.wireless.scenarios import Scenario, ScenarioTrace  # noqa: F401

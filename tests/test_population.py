@@ -1,0 +1,497 @@
+"""Population-scale FL: store gather/scatter, seeded samplers, scenario
+traces, and the sampled-cohort round's parity with a standalone cohort.
+
+The contract under test (fl/population.py + wireless/scenarios.py):
+
+* ``ClientSampler`` is one seeded stream — same seed → same cohort
+  sequence, and a ``state_dict`` snapshot restored mid-stream reproduces
+  the uninterrupted sequence exactly (checkpoint resume).
+* ``PopulationStore.gather``/``scatter`` round-trip rows losslessly,
+  never touch unsampled rows, and reuse ONE staging buffer per slot
+  (steady-state rounds allocate nothing).
+* A sampled cohort pushed through the fused robust round body and
+  scattered back equals the same clients run as a standalone
+  ``n_clients=cohort`` stack, ≤1e-6 (here: bitwise — same program, same
+  inputs).
+* ``Scenario.realize`` is a pure function of the spec: per-axis draw
+  blocks keep class_probs stable when availability/mobility toggle.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import trees
+from repro.fl.population import (ClientSampler, PopulationConfig,
+                                 PopulationData, PopulationStore,
+                                 stacked_client_init)
+from repro.wireless.scenarios import Scenario
+
+# ---------------------------------------------------------------------------
+# ClientSampler: determinism + mid-stream resume
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_same_seed_same_stream():
+    a = ClientSampler("uniform", 100, 8, seed=7)
+    b = ClientSampler("uniform", 100, 8, seed=7)
+    for _ in range(10):
+        np.testing.assert_array_equal(a.sample(), b.sample())
+
+
+def test_sampler_different_seed_differs():
+    a = ClientSampler("uniform", 1000, 8, seed=0)
+    b = ClientSampler("uniform", 1000, 8, seed=1)
+    assert any(not np.array_equal(a.sample(), b.sample()) for _ in range(5))
+
+
+def test_sampler_cohort_shape_and_uniqueness():
+    s = ClientSampler("uniform", 50, 16, seed=0)
+    for _ in range(20):
+        ids = s.sample()
+        assert ids.shape == (16,)
+        assert len(np.unique(ids)) == 16
+        assert np.all(np.diff(ids) > 0)          # sorted, no repeats
+        assert ids.min() >= 0 and ids.max() < 50
+
+
+def test_sampler_midstream_resume_reproduces_stream():
+    """A state_dict taken mid-stream resumes into the SAME uninterrupted
+    cohort sequence (the checkpoint/resume contract)."""
+    ref = ClientSampler("uniform", 200, 8, seed=3)
+    full = [ref.sample() for _ in range(12)]
+
+    first = ClientSampler("uniform", 200, 8, seed=3)
+    for _ in range(5):
+        first.sample()
+    snap = first.state_dict()
+
+    resumed = ClientSampler("uniform", 200, 8, seed=3)
+    resumed.load_state_dict(snap)
+    for r in range(5, 12):
+        np.testing.assert_array_equal(resumed.sample(), full[r])
+
+
+def test_sampler_state_dict_json_roundtrip():
+    import json
+    s = ClientSampler("availability", 64, 4, seed=1)
+    p = np.linspace(0.1, 1.0, 64)
+    s.sample(p)
+    snap = json.loads(json.dumps(s.state_dict()))   # sidecar is JSON
+    t = ClientSampler("availability", 64, 4, seed=99)
+    t.load_state_dict(snap)
+    for _ in range(5):
+        np.testing.assert_array_equal(s.sample(p), t.sample(p))
+
+
+def test_availability_sampler_skews_to_reachable():
+    s = ClientSampler("availability", 100, 10, seed=0)
+    p = np.full(100, 1e-6)
+    p[:20] = 1.0            # only the first 20 clients are reachable
+    counts = np.zeros(100)
+    for _ in range(50):
+        counts[s.sample(p)] += 1
+    assert counts[:20].sum() > 0.99 * counts.sum()
+
+
+def test_sampler_unknown_kind_raises():
+    with pytest.raises(ValueError):
+        ClientSampler("roundrobin", 10, 2)
+
+
+# ---------------------------------------------------------------------------
+# PopulationConfig validation
+# ---------------------------------------------------------------------------
+
+
+def test_population_config_validates():
+    PopulationConfig(population=100, cohort_size=8)
+    with pytest.raises(ValueError):
+        PopulationConfig(population=4, cohort_size=8)
+    with pytest.raises(ValueError):
+        PopulationConfig(population=10, cohort_size=0)
+    with pytest.raises(ValueError):
+        PopulationConfig(population=10, cohort_size=2, sampler="magic")
+    # availability sampling needs an availability trace to weight by
+    with pytest.raises(ValueError):
+        PopulationConfig(population=10, cohort_size=2,
+                         sampler="availability")
+    with pytest.raises(ValueError):
+        PopulationConfig(population=10, cohort_size=2,
+                         sampler="availability", scenario=Scenario())
+    PopulationConfig(population=10, cohort_size=2, sampler="availability",
+                     scenario=Scenario(avail="diurnal"))
+
+
+# ---------------------------------------------------------------------------
+# PopulationStore: gather/scatter round-trip, isolation, buffer reuse
+# ---------------------------------------------------------------------------
+
+
+def _toy_store(n, seed=0):
+    r = np.random.RandomState(seed)
+    tree = {"a": {"w": r.randn(n, 3, 4).astype(np.float32)},
+            "b": r.randn(n, 5).astype(np.float32)}
+    return PopulationStore({"trainable": tree}), tree
+
+
+def test_store_gather_scatter_roundtrip():
+    store, ref = _toy_store(32)
+    ids = np.asarray([3, 7, 11, 30])
+    g = store.gather("trainable", ids)
+    np.testing.assert_array_equal(g["a"]["w"], ref["a"]["w"][ids])
+    np.testing.assert_array_equal(g["b"], ref["b"][ids])
+    store.scatter("trainable", ids, jax.tree_util.tree_map(jnp.asarray, g))
+    np.testing.assert_array_equal(store.slots["trainable"]["a"]["w"],
+                                  ref["a"]["w"])
+
+
+def test_store_scatter_leaves_unsampled_rows_untouched():
+    store, ref = _toy_store(16)
+    ids = np.asarray([2, 5])
+    new = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((2,) + l.shape[1:], l.dtype),
+        store.gather("trainable", ids))
+    store.scatter("trainable", ids, new)
+    mask = np.ones(16, bool)
+    mask[ids] = False
+    np.testing.assert_array_equal(store.slots["trainable"]["b"][mask],
+                                  ref["b"][mask])
+    np.testing.assert_array_equal(store.slots["trainable"]["b"][ids], 0.0)
+
+
+def test_store_gather_ghost_pad_repeats_first_row():
+    store, ref = _toy_store(8)
+    ids = np.asarray([1, 4])
+    g = store.gather("trainable", ids, pad_to=5)
+    assert g["b"].shape == (5, 5)
+    for ghost in range(2, 5):
+        np.testing.assert_array_equal(g["b"][ghost], ref["b"][1])
+
+
+def test_store_gather_reuses_staging_buffer():
+    """Steady-state rounds must not allocate: the second gather refills the
+    SAME numpy buffer objects."""
+    store, _ = _toy_store(16)
+    g1 = store.gather("trainable", np.asarray([0, 1]), pad_to=4)
+    g2 = store.gather("trainable", np.asarray([9, 3]), pad_to=4)
+    assert g1["b"] is g2["b"]
+    assert g1["a"]["w"] is g2["a"]["w"]
+
+
+def test_store_scatter_copies_out_of_device_buffer():
+    """scatter must COPY device results: a zero-copy view of a donated jax
+    buffer would dangle once the next round rebinds it."""
+    store, _ = _toy_store(4)
+    ids = np.asarray([0, 1])
+    dev = jax.tree_util.tree_map(jnp.asarray, store.gather("trainable", ids))
+    store.scatter("trainable", ids, dev)
+    for leaf in jax.tree_util.tree_leaves(store.slots["trainable"]):
+        assert leaf.flags.writeable            # host-owned, not a jax view
+
+
+def test_store_zero_rows():
+    store, ref = _toy_store(8)
+    store.zero_rows("trainable", [2, 6])
+    np.testing.assert_array_equal(store.slots["trainable"]["b"][2], 0.0)
+    np.testing.assert_array_equal(store.slots["trainable"]["b"][5],
+                                  ref["b"][5])
+
+
+def test_store_checkpoint_roundtrip():
+    store, ref = _toy_store(8)
+    tree = store.checkpoint_tree()
+    store2, _ = _toy_store(8, seed=1)
+    store2.load_checkpoint_tree(tree)
+    np.testing.assert_array_equal(store2.slots["trainable"]["b"], ref["b"])
+    # restored slots stay writable (np.savez round-trips can return
+    # read-only arrays)
+    store2.zero_rows("trainable", [0])
+
+
+def test_stacked_client_init_broadcasts_constants():
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(0), i))(
+        jnp.arange(6))
+    st = stacked_client_init(
+        lambda k: {"w": jax.random.normal(k, (3,)),
+                   "c": jnp.zeros((2,))}, keys)
+    assert st["w"].shape == (6, 3)
+    assert st["c"].shape == (6, 2)
+    assert len({tuple(np.asarray(st["w"][i])) for i in range(6)}) == 6
+
+
+# ---------------------------------------------------------------------------
+# sampled-cohort round ≡ standalone cohort (the tentpole parity claim)
+# ---------------------------------------------------------------------------
+
+
+def _toy_cohort(n, seed=0):
+    from repro.optim import sgd
+
+    def loss_fn(tr, batch):
+        return jnp.mean((tr["shared"]["w"].sum() + tr["local"]["v"].sum()
+                         - batch["tgt"]) ** 2)
+
+    opt = sgd(1e-2)
+
+    def local_step(tr, op, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(tr, batch)
+        upd, op = opt.update(grads, op, tr)
+        return jax.tree_util.tree_map(lambda p, u: p + u, tr, upd), op, loss
+
+    rng = np.random.RandomState(seed)
+    mk = lambda: {"shared": {"w": rng.randn(3).astype(np.float32)},
+                  "local": {"v": rng.randn(2).astype(np.float32)}}
+    stacked = trees.stack([mk() for _ in range(n)])
+    return local_step, opt, stacked, rng
+
+
+def test_sampled_round_matches_standalone_cohort():
+    """Gather K rows from an N-client store, run the fused robust round,
+    scatter back — the sampled rows must equal the same K clients run as a
+    standalone n_clients=K stack (same compiled program, same inputs: the
+    store adds nothing numerically).  ≤1e-6 required; bitwise expected."""
+    from repro.core.cohort import build_supervised_round
+
+    N, K = 24, 4
+    local_step, opt, stacked, rng = _toy_cohort(N)
+    st_op = stacked_client_init(
+        lambda k: opt.init({"shared": {"w": jnp.zeros(3)},
+                            "local": {"v": jnp.zeros(2)}}),
+        jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(0), i))(
+            jnp.arange(N)))
+    pend = jax.tree_util.tree_map(
+        np.zeros_like, trees.select(stacked, lambda p: p.startswith("shared")))
+    store = PopulationStore({"trainable": stacked, "opt": st_op,
+                             "pending": pend})
+
+    step = build_supervised_round(local_step,
+                                  lambda p: p.startswith("shared"),
+                                  donate=False, robust=True)
+    ids = ClientSampler("uniform", N, K, seed=5).sample()
+    batches = {"tgt": jnp.asarray(rng.randn(K, 2, 1), np.float32)}
+    train = jnp.asarray([1.0, 0.0, 1.0, 1.0])     # client 1 straggles
+    aggw = jnp.asarray([1.0, 0.5, 1.0, 1.0])
+    recv = rej = None
+    recv, rej, ontime = jnp.ones(K), jnp.zeros(K), jnp.ones(K)
+
+    # standalone reference: the K clients as their own cohort
+    ref_tr = jax.tree_util.tree_map(jnp.asarray,
+                                    store.gather("trainable", ids))
+    ref_op = jax.tree_util.tree_map(jnp.asarray, store.gather("opt", ids))
+    ref_pd = jax.tree_util.tree_map(jnp.asarray,
+                                    store.gather("pending", ids))
+    ref = step(ref_tr, ref_op, ref_pd, batches, train, aggw, recv, rej,
+               ontime)
+
+    # population path: gather → round → scatter → read the rows back
+    tr_d = jax.tree_util.tree_map(jnp.asarray,
+                                  store.gather("trainable", ids))
+    op_d = jax.tree_util.tree_map(jnp.asarray, store.gather("opt", ids))
+    pd_d = jax.tree_util.tree_map(jnp.asarray, store.gather("pending", ids))
+    out = step(tr_d, op_d, pd_d, batches, train, aggw, recv, rej, ontime)
+    store.scatter("trainable", ids, out[0])
+    store.scatter("opt", ids, out[1])
+    store.scatter("pending", ids, out[2])
+
+    got_tr = store.gather("trainable", ids)
+    for k, leaf in trees.flatten(ref[0]).items():
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   trees.flatten(got_tr)[k], atol=1e-6,
+                                   err_msg=k)
+    got_pd = store.gather("pending", ids)
+    for k, leaf in trees.flatten(ref[2]).items():
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   trees.flatten(got_pd)[k], atol=1e-6,
+                                   err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# PopulationData: pure-function draws
+# ---------------------------------------------------------------------------
+
+
+def _toy_pool(n=64, n_classes=4, seed=0):
+    r = np.random.RandomState(seed)
+    return {"tokens": r.randint(0, 100, (n, 8)).astype(np.int32),
+            "label": np.arange(n) % n_classes}
+
+
+def test_population_data_draws_are_pure():
+    probs = np.full((4, 4), 0.25)
+    d1 = PopulationData(_toy_pool(), probs, seed=3)
+    d2 = PopulationData(_toy_pool(), probs, seed=3)
+    b1 = d1.round_batches(2, 7, local_steps=2, batch=4)
+    # consumption order doesn't matter: draw other clients/rounds first
+    d2.round_batches(0, 0, 2, 4)
+    d2.test_set(2, 8)
+    b2 = d2.round_batches(2, 7, local_steps=2, batch=4)
+    for x, y in zip(b1, b2):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+
+
+def test_population_data_respects_class_probs():
+    probs = np.zeros((2, 4))
+    probs[0, 1] = 1.0            # client 0 only ever sees class 1
+    probs[1] = 0.25
+    d = PopulationData(_toy_pool(256), probs, seed=0)
+    for b in d.round_batches(0, 0, local_steps=4, batch=16):
+        assert np.all(b["label"] == 1)
+
+
+def test_population_data_test_set_disjoint_stream():
+    probs = np.full((1, 4), 0.25)
+    d = PopulationData(_toy_pool(), probs, seed=0)
+    te = d.test_set(0, 16)
+    te2 = d.test_set(0, 16)
+    np.testing.assert_array_equal(te["tokens"], te2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Scenario traces
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_inert_default():
+    s = Scenario()
+    assert s.is_inert()
+    tr = s.realize(8, 5)
+    np.testing.assert_array_equal(tr.avail, 1.0)
+    np.testing.assert_array_equal(tr.gain_scale, 1.0)
+    np.testing.assert_allclose(tr.class_probs, 0.25)
+
+
+def test_scenario_dirichlet_noniid():
+    tr = Scenario(alpha=0.1, seed=1).realize(100, 3)
+    assert tr.class_probs.shape == (100, 4)
+    np.testing.assert_allclose(tr.class_probs.sum(1), 1.0, atol=1e-9)
+    # α=0.1 is strongly skewed: the dominant class carries far more mass
+    # than the IID 0.25
+    assert tr.class_probs.max(1).mean() > 0.6
+
+
+def test_scenario_axes_are_independent_draw_blocks():
+    """Enabling availability must not perturb the Dirichlet draw (fixed
+    per-axis block order in realize)."""
+    a = Scenario(alpha=0.1, seed=2).realize(32, 4)
+    b = Scenario(alpha=0.1, avail="diurnal", seed=2).realize(32, 4)
+    np.testing.assert_array_equal(a.class_probs, b.class_probs)
+
+
+def test_scenario_horizon_prefix_stable():
+    """Re-realizing with a longer horizon reproduces the shorter run's
+    rows (kill/resume emulates the kill by running fewer rounds)."""
+    s = Scenario(alpha=0.1, avail="diurnal", mobility="waypoint", seed=1)
+    a, b = s.realize(16, 3), s.realize(16, 9)
+    np.testing.assert_array_equal(a.class_probs, b.class_probs)
+    np.testing.assert_array_equal(a.avail, b.avail[:3])
+    np.testing.assert_array_equal(a.avail_p, b.avail_p[:3])
+    np.testing.assert_array_equal(a.gain_scale, b.gain_scale[:3])
+
+
+def test_scenario_diurnal_availability_bounds():
+    s = Scenario(avail="diurnal", avail_period=8, avail_min=0.05, seed=0)
+    tr = s.realize(16, 32)
+    assert tr.avail_p.min() >= 0.05 - 1e-12
+    assert tr.avail_p.max() <= 1.0 + 1e-12
+    assert set(np.unique(tr.avail)) <= {0.0, 1.0}
+    # a diurnal population is not always-on
+    assert 0.0 < tr.avail.mean() < 1.0
+
+
+def test_scenario_periodic_duty_cycle():
+    s = Scenario(avail="periodic", avail_period=4, avail_duty=0.5, seed=0)
+    tr = s.realize(64, 16)
+    assert abs(tr.avail_p.mean() - 0.5) < 0.2
+
+
+def test_scenario_waypoint_gains():
+    s = Scenario(mobility="waypoint", seed=4)
+    tr = s.realize(32, 10)
+    assert tr.gain_scale.shape == (10, 32)
+    assert tr.gain_scale.min() > 0.0
+    assert tr.gain_scale.max() <= 1.0 + 1e-6       # unit gain inside ref_m
+    # clients move: per-client gains change over rounds
+    assert np.abs(np.diff(tr.gain_scale, axis=0)).max() > 0.0
+
+
+def test_scenario_trace_clamps_past_horizon():
+    tr = Scenario(avail="diurnal", mobility="waypoint", seed=0).realize(4, 3)
+    np.testing.assert_array_equal(tr.avail_round(99), 1.0)
+    np.testing.assert_array_equal(tr.gain_round(99), 1.0)
+    np.testing.assert_array_equal(tr.avail_probs(99), 1.0)
+
+
+def test_scenario_from_spec_roundtrip():
+    s = Scenario.from_spec("alpha=0.1,avail=diurnal,avail_period=8,"
+                           "mobility=waypoint,seed=3")
+    assert s.alpha == 0.1 and s.avail == "diurnal" and s.seed == 3
+    assert Scenario.from_dict(s.to_dict()) == s
+    assert Scenario.from_spec(None) is None
+    assert Scenario.from_spec("none") is None
+    assert math.isinf(Scenario.from_spec("alpha=inf").alpha)
+
+
+def test_scenario_from_spec_unknown_key_raises():
+    with pytest.raises(ValueError):
+        Scenario.from_spec("alpha=0.1,warp=9")
+    with pytest.raises(ValueError):
+        Scenario.from_dict({"alpha": 0.1, "warp": 9})
+    with pytest.raises(ValueError):
+        Scenario(avail="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: population PFTT determinism + resume (the fused stack)
+# ---------------------------------------------------------------------------
+
+POP_KW = dict(rounds=3, local_steps=2, batch=4, pretrain_steps=10,
+              samples_per_client=32, test_samples=8, d_model=32,
+              lora_rank=2, adapter_dim=4, seed=0, verbose=False)
+
+
+def _pop_cfg(tmp_path=None, resume=False, rounds=3, **kw):
+    from repro.core.pftt import PFTTConfig
+    pop = PopulationConfig(
+        population=16, cohort_size=4, sampler="availability",
+        scenario=Scenario(alpha=0.1, avail="diurnal", avail_period=6,
+                          mobility="waypoint", seed=1))
+    base = dict(POP_KW, rounds=rounds, **kw)
+    return PFTTConfig(population=pop,
+                      ckpt_dir=None if tmp_path is None else str(tmp_path),
+                      resume=resume, **base)
+
+
+@pytest.mark.slow
+def test_population_pftt_deterministic():
+    from repro.core.pftt import run_pftt
+    a = run_pftt(_pop_cfg())
+    b = run_pftt(_pop_cfg())
+    np.testing.assert_array_equal(a["acc_per_round"], b["acc_per_round"])
+    assert a["total_bytes"] == b["total_bytes"]
+    assert 0.0 < a["participation_frac"] <= 1.0
+
+
+@pytest.mark.slow
+def test_population_pftt_kill_resume_exact(tmp_path):
+    """A run killed after 2 of 4 rounds and resumed must reproduce the
+    uninterrupted run exactly: store + global from the npz, sampler RNG /
+    tracker / flags from the sidecar, channel draws burned."""
+    from repro.core.pftt import run_pftt
+    full = run_pftt(_pop_cfg(rounds=4))
+    run_pftt(_pop_cfg(tmp_path, rounds=2))              # "killed" after 2
+    res = run_pftt(_pop_cfg(tmp_path, resume=True, rounds=4))
+    np.testing.assert_array_equal(full["acc_per_round"],
+                                  res["acc_per_round"])
+    assert full["total_bytes"] == res["total_bytes"]
+
+
+def test_population_pfit_rejects_full_tree_methods():
+    from repro.core.pfit import PFITConfig, run_pfit
+    cfg = PFITConfig(rounds=1, population=PopulationConfig(
+        population=8, cohort_size=2), method="pfit")
+    with pytest.raises(ValueError):
+        run_pfit(cfg)
