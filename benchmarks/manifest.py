@@ -29,6 +29,7 @@ HEADLINES = {
     "deadline": ("BENCH_deadline.json", "acceptance.sim_time_ratio", True),
     "population": ("BENCH_population.json",
                    "acceptance.host_overhead_frac", False),
+    "obs": ("BENCH_obs.json", "acceptance.overhead_ratio", False),
 }
 
 MANIFEST_FILE = "BENCH_manifest.json"

@@ -1,0 +1,202 @@
+"""Run-telemetry overhead: the observability acceptance pin.
+
+Telemetry (``repro.obs``) must be effectively free: the acceptance gate
+is <2% round wall-clock overhead at population scale (10k-client store,
+64-client sampled cohorts — the same workload ``population_bench``
+pins), with the fused engine still doing exactly ONE dispatch per round
+and ZERO dense merges while the on-device health scalars ride along.
+
+Measurement: steady-state round wall — the runner's per-round round
+span (``round_wall``; sample+plan+gather+device-step+scatter+ledger,
+which contains every in-round telemetry cost: span bookkeeping, Chrome
+event recording, and the in-body health reductions), round 0 (compile)
+excluded, MINIMUM over the post-compile rounds of ALTERNATED off/on/
+off/on runs — scheduler noise is one-sided additive (min is the classic
+low-variance estimator of the true steady cost) and alternation cancels
+the slow process-level drift that otherwise swamps a 2% gate when one
+side runs entirely before the other.  The per-round JSONL
+emission (``tele.round_event``, the one cost that lands outside the
+round span) is microbenched directly and added to the ON side.  Eval is
+excluded from both sides (same compiled eval program either way), which
+only shrinks the denominator — the reported fraction is conservative.
+Dispatch count is read from the run's OWN trace artifact (one
+``device-step`` span per round) and dense merges from
+``peft.dense_merge_count()`` (trace-time counter: zero delta over the
+run proves the compiled program contains no merged weights).
+
+    PYTHONPATH=src python -m benchmarks.run --only obs      # quick
+    FULL=1 PYTHONPATH=src python -m benchmarks.obs_overhead_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+POP_N, COHORT_K = 10_000, 64
+
+
+def _pftt_kw(**over):
+    kw = dict(local_steps=3, batch=4, pretrain_steps=10,
+              samples_per_client=32, test_samples=8, d_model=32,
+              lora_rank=2, adapter_dim=4, seed=0, verbose=False)
+    kw.update(over)
+    return kw
+
+
+def _run(rounds: int, tele_dir: str | None) -> dict:
+    from repro.core.pftt import PFTTConfig, run_pftt
+    from repro.fl.population import PopulationConfig
+    from repro.obs import TelemetryConfig
+    from repro.wireless.scenarios import Scenario
+
+    pop = PopulationConfig(
+        population=POP_N, cohort_size=COHORT_K, sampler="availability",
+        scenario=Scenario(alpha=0.1, avail="diurnal", avail_period=24,
+                          mobility="waypoint", seed=1))
+    tele = (TelemetryConfig(out_dir=tele_dir, trace=True, health=True)
+            if tele_dir else None)
+    t0 = time.perf_counter()
+    res = run_pftt(PFTTConfig(population=pop, rounds=rounds, telemetry=tele,
+                              **_pftt_kw()))
+    return {"wall_s": time.perf_counter() - t0,
+            "round_wall": res["round_wall"],
+            "final_acc": res["final_acc"]}
+
+
+def _emit_cost_s(tmpdir: str, n: int = 200) -> float:
+    """Median seconds per JSONL round-event append (open+write+fsync) —
+    the one per-round telemetry cost outside the runner's round span."""
+    import numpy as np
+
+    from repro.obs import HEALTH_KEYS, RunTelemetry
+
+    tele = RunTelemetry(os.path.join(tmpdir, "emit"))
+    tele.start({"mode": "emit-microbench"})
+    data = {"acc": 0.5, "cohort": list(range(COHORT_K)),
+            "comm": {"record_id": 0, "round": 0, "bytes": 1e5,
+                     "delay_s": 0.05, "energy_j": 1.0, "outages": 3},
+            "staleness": {"pending": 2, "abandoned": 0,
+                          "retransmissions": 1, "quorum_noops": 0},
+            "health": {k: 0.123 for k in HEALTH_KEYS}}
+    wall = {"phases": {"round": 0.4, "device-step": 0.35, "sample": 1e-4,
+                       "gather": 3e-3, "scatter": 2e-3, "ledger": 1e-3}}
+    ts = []
+    for i in range(n):
+        t0 = time.perf_counter()
+        tele.round_event(i, data, wall=wall)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _overhead(quick: bool, tmpdir: str) -> dict:
+    import numpy as np
+
+    from repro.models import peft
+
+    rounds = 8 if quick else 16
+
+    m0 = peft.dense_merge_count()
+    off_a = _run(rounds, None)
+    on_a = _run(rounds, os.path.join(tmpdir, "warm"))
+    off_b = _run(rounds, None)
+    on_b = _run(rounds, os.path.join(tmpdir, "main"))
+    dense_merges = peft.dense_merge_count() - m0
+    emit_s = _emit_cost_s(tmpdir)
+
+    # steady-state: drop each run's compile round, min over the union of
+    # the alternated runs on each side
+    off_walls = off_a["round_wall"][1:] + off_b["round_wall"][1:]
+    on_walls = on_a["round_wall"][1:] + on_b["round_wall"][1:]
+    off_med = float(np.min(off_walls))
+    on_med = float(np.min(on_walls))
+    row = {
+        "population": POP_N, "cohort": COHORT_K, "rounds": rounds,
+        "off_ms_per_round": 1e3 * off_med,
+        "on_ms_per_round": 1e3 * (on_med + emit_s),
+        "emit_ms_per_round": 1e3 * emit_s,
+        "overhead_frac": (on_med + emit_s) / max(off_med, 1e-9) - 1.0,
+        "round_wall_off": off_walls,
+        "round_wall_on": on_walls,
+        "dense_merges_with_health": int(dense_merges),
+        "acc_off": off_b["final_acc"], "acc_on": on_b["final_acc"],
+    }
+    print(f"obs_overhead,{row['overhead_frac']:.4f},"
+          f"{POP_N} clients cohort {COHORT_K}: "
+          f"{row['off_ms_per_round']:.1f}ms/round off vs "
+          f"{row['on_ms_per_round']:.1f}ms on "
+          f"(jsonl emit {row['emit_ms_per_round']:.2f}ms)")
+    return row
+
+
+def _artifacts(tele_dir: str, rounds: int) -> dict:
+    """Acceptance read from the ON run's own artifacts: schema-valid
+    event stream, one device-step span per round."""
+    from repro.launch.report import main as report_main
+    from repro.obs import read_events, validate_events
+
+    events = read_events(os.path.join(tele_dir, "events.jsonl"))
+    errors = validate_events(events)
+    n_rounds = sum(1 for e in events if e.get("event") == "round")
+    with open(os.path.join(tele_dir, "trace.json")) as f:
+        chrome = json.load(f)["traceEvents"]
+    dispatches = sum(1 for e in chrome if e["name"] == "device-step")
+    check_ok = report_main([tele_dir, "--check"]) == 0
+    row = {
+        "events": len(events), "round_events": n_rounds,
+        "schema_errors": [str(e) for e in errors],
+        "device_step_spans": dispatches,
+        "dispatches_per_round": dispatches / max(rounds, 1),
+        "report_check_ok": bool(check_ok),
+    }
+    print(f"obs_artifacts,{row['dispatches_per_round']:.2f},"
+          f"{n_rounds} round events, {dispatches} device-step spans, "
+          f"report --check {'OK' if check_ok else 'FAILED'}")
+    return row
+
+
+def main(quick: bool = True, out: str = "BENCH_obs.json"):
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        overhead = _overhead(quick, td)
+        arts = _artifacts(os.path.join(td, "main"), overhead["rounds"])
+
+    accept = {
+        "overhead_frac": overhead["overhead_frac"],
+        # the headline check_regression watches: ON/OFF round-wall ratio —
+        # ~1.0 and stable, unlike the near-zero (noise-signed) frac
+        "overhead_ratio": 1.0 + overhead["overhead_frac"],
+        "overhead_lt_2pct": bool(overhead["overhead_frac"] < 0.02),
+        "dispatches_per_round": arts["dispatches_per_round"],
+        "one_dispatch_per_round":
+            bool(arts["dispatches_per_round"] == 1.0),
+        "dense_merges_with_health": overhead["dense_merges_with_health"],
+        "zero_dense_merges":
+            bool(overhead["dense_merges_with_health"] == 0),
+        "schema_valid": not arts["schema_errors"],
+        "acc_unchanged":
+            bool(overhead["acc_off"] == overhead["acc_on"]),
+    }
+    for k, v in accept.items():
+        print(f"# accept[{k}] = {v}")
+
+    record = {"profile": "quick" if quick else "full",
+              "workload": f"PFTT population mode ({POP_N}-client store, "
+                          f"{COHORT_K}-client cohorts) with run telemetry "
+                          "ON (JSONL events + Chrome trace + on-device "
+                          "health scalars) vs OFF; steady-state per-round "
+                          "wall = min over post-compile rounds of the "
+                          "runner's round span + measured JSONL emit cost",
+              "overhead": overhead,
+              "artifacts": arts,
+              "acceptance": accept}
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {out}")
+    return record
+
+
+if __name__ == "__main__":
+    main(quick=not bool(os.environ.get("FULL")))

@@ -6,7 +6,8 @@
 Default is the quick profile (CI-friendly); ``--full`` (or env FULL=1) runs
 the paper's 40-round simulations.  ``--only`` takes a comma-separated
 subset.  Prints ``name,us_per_call,derived`` CSV blocks plus the per-figure
-summaries, then a per-benchmark wall-time table, and writes
+summaries, then a per-benchmark wall-time table (also persisted as
+``BENCH_run_times.json``), and writes
 ``BENCH_manifest.json`` (benchmark → output file → headline metric, from
 ``benchmarks/manifest.py``) for the CI regression check
 (``benchmarks/check_regression.py``).  A benchmark that raises is reported
@@ -68,6 +69,11 @@ def _benches():
         from benchmarks import population_bench
         population_bench.main(quick=quick, out="BENCH_population.json")
 
+    def obs(quick):
+        print("\n# === run telemetry: events/trace/health overhead on the fused round ===")
+        from benchmarks import obs_overhead_bench
+        obs_overhead_bench.main(quick=quick, out="BENCH_obs.json")
+
     def fig5(quick):
         print("\n# === Fig. 5: PFTT accuracy / communication ===")
         from benchmarks import fig5_pftt
@@ -92,6 +98,7 @@ def _benches():
             "straggler": straggler,
             "deadline": deadline,
             "population": population,
+            "obs": obs,
             "fig5": fig5,
             "fig4": fig4,
             "roofline": lambda quick: roofline()}
@@ -131,11 +138,22 @@ def main() -> None:
             print(f"# BENCHMARK FAILED: {name} (continuing)", file=sys.stderr)
         timings.append((name, time.time() - tb))
 
+    total_s = time.time() - t0
     print(f"\n# per-benchmark wall time:")
     for name, dt in timings:
         print(f"#   {name:<14s} {dt:7.1f}s"
               + ("  [FAILED]" if name in failures else ""))
-    print(f"# total {time.time()-t0:.0f}s (quick={quick})")
+    print(f"# total {total_s:.0f}s (quick={quick})")
+
+    # persist the wall-time table next to the BENCH_*.json artifacts so a
+    # CI run's cost profile is diffable, not just scrollback
+    import json
+    with open("BENCH_run_times.json", "w") as f:
+        json.dump({"profile": "quick" if quick else "full",
+                   "total_s": total_s,
+                   "benchmarks": [{"name": name, "wall_s": dt,
+                                   "failed": name in failures}
+                                  for name, dt in timings]}, f, indent=1)
 
     # benchmark → output file → headline metric, so the CI regression
     # check never hardcodes file names (benchmarks/check_regression.py)

@@ -78,6 +78,7 @@ from repro.core.aggregation import (broadcast_merge_stacked,
                                     factored_fedavg_stacked, fedavg_stacked,
                                     masked_fedavg_stacked)
 from repro.core.aggregation import _pad_mask
+from repro.obs.health import cohort_health
 from repro.rlhf.ppo import PPOConfig, make_ppo_fns
 from repro.rlhf.rollout import generate
 from repro.sharding import client_shard_axes, shard_map
@@ -236,7 +237,8 @@ def build_supervised_round(local_step_fn: Callable,
                            *, donate: bool = True, mesh=None,
                            client_axes=None, codec=None,
                            factored_agg: bool = False,
-                           robust: bool = False, min_quorum: int = 0):
+                           robust: bool = False, min_quorum: int = 0,
+                           health: bool = False):
     """Fuse per-client local SGD + FedAvg + broadcast into one jitted step.
 
     ``local_step_fn(trainable, opt_state, batch) -> (trainable, opt_state,
@@ -289,6 +291,11 @@ def build_supervised_round(local_step_fn: Callable,
     fewer than ``min_quorum`` positive-weight deliveries is a no-op merge
     (0 keeps the plain ``Σw > 0`` gate).  All-ones masks + undiscounted
     weights reduce bitwise to the synchronous round.
+
+    ``health``: append one extra output — a dict of replicated f32
+    training-health scalars (``repro.obs.health.cohort_health``) computed
+    inside the same compiled body, so the round still costs exactly one
+    dispatch and the factored path is untouched.
     """
     pred = upload_pred or (lambda p: True)
     axes = None if mesh is None else client_shard_axes(mesh, client_axes)
@@ -296,7 +303,11 @@ def build_supervised_round(local_step_fn: Callable,
 
     def robust_body(st_trainable, st_opt, pending, batches, train_m, agg_w,
                     recv_m, rejoin_m, ontime_m, keys=None):
-        ref = trees.select(st_trainable, pred) if codec is not None else None
+        # round-input uploaded subtree: the codec's delta reference AND the
+        # health scalars' update baseline (send − up_in = this round's delta)
+        up_in = (trees.select(st_trainable, pred)
+                 if (codec is not None or health) else None)
+        ref = up_in if codec is not None else None
 
         def client(tr, op, client_batches):
             def step(carry, batch):
@@ -315,6 +326,7 @@ def build_supervised_round(local_step_fn: Callable,
         losses = losses * train_m[:, None]
 
         uploaded = trees.select(st_trainable, pred)
+        raw = uploaded if (health and codec is not None) else None
         bits = jnp.zeros_like(agg_w)
         if codec is not None:
             uploaded, bits = jax.vmap(
@@ -346,15 +358,24 @@ def build_supervised_round(local_step_fn: Callable,
 
         st_trainable = trees.map_with_path(put, st_trainable)
         st_opt = _zero_clients(rejoin_m, st_opt)   # crash-rejoin: fresh opt
+        outs = (st_trainable, st_opt, send, losses)
         if codec is not None:
-            return st_trainable, st_opt, send, losses, bits
-        return st_trainable, st_opt, send, losses
+            outs = outs + (bits,)
+        if health:
+            outs = outs + (cohort_health(
+                send, up_in, losses, agg_w, gate.astype(jnp.float32),
+                train_m=train_m, raw=raw,
+                decoded=uploaded if codec is not None else None,
+                axis_names=axes),)
+        return outs
 
     def round_body(st_trainable, st_opt, batches, weights, keys=None):
         # server-known reference for delta coding: the round-input value of
         # the uploaded subtree (the previous broadcast global on every
-        # non-all-outage round)
-        ref = trees.select(st_trainable, pred) if codec is not None else None
+        # non-all-outage round); doubles as the health-delta baseline
+        up_in = (trees.select(st_trainable, pred)
+                 if (codec is not None or health) else None)
+        ref = up_in if codec is not None else None
 
         def client(tr, op, client_batches):
             def step(carry, batch):
@@ -373,6 +394,7 @@ def build_supervised_round(local_step_fn: Callable,
         # every client's stacked slot.  With a codec, the server only ever
         # sees the lossy decode of each client's upload.
         uploaded = trees.select(st_trainable, pred)
+        raw = uploaded if (health and codec is not None) else None
         bits = None
         if codec is not None:
             uploaded, bits = jax.vmap(
@@ -393,9 +415,15 @@ def build_supervised_round(local_step_fn: Callable,
             return jnp.where(gate, bc, loc)
 
         st_trainable = trees.map_with_path(put, st_trainable)
+        outs = (st_trainable, st_opt, losses)
         if codec is not None:
-            return st_trainable, st_opt, losses, bits
-        return st_trainable, st_opt, losses
+            outs = outs + (bits,)
+        if health:
+            outs = outs + (cohort_health(
+                uploaded, up_in, losses, weights, gate.astype(jnp.float32),
+                raw=raw, decoded=uploaded if codec is not None else None,
+                axis_names=axes),)
+        return outs
 
     body = robust_body if robust else round_body
     if mesh is None:
@@ -410,9 +438,11 @@ def build_supervised_round(local_step_fn: Callable,
         n_in, n_out = (5, 4) if codec is not None else (4, 3)
         if robust:
             n_in, n_out = n_in + 5, n_out + 1
+        # health scalars are psum-ed inside the body → replicated out-spec
+        out_specs = (pc,) * n_out + ((P(),) if health else ())
         round_step = shard_map(body, mesh=mesh,
                                in_specs=(pc,) * n_in,
-                               out_specs=(pc,) * n_out, check_vma=False)
+                               out_specs=out_specs, check_vma=False)
     donate_args = ((0, 1, 2) if robust else (0, 1)) if donate else ()
     return jax.jit(round_step, donate_argnums=donate_args)
 

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Dict, List, Optional
 
 import jax
@@ -56,6 +57,8 @@ from repro.data.partition import client_topic_preferences
 from repro.data.synthetic import InstructionCorpus, N_TOPICS
 from repro.models import Model
 from repro.models import peft as peft_mod
+from repro.obs.metrics import RunTelemetry
+from repro.obs.trace import SpanTracer, jax_profile_start, jax_profile_stop
 from repro.optim import adamw
 from repro.rlhf.ppo import PPOConfig, PPOTrainer
 from repro.rlhf.reward_model import RewardModel, train_reward_model
@@ -112,6 +115,10 @@ class PFITConfig:
                                    # (shepherd only; PPO methods carry full
                                    # per-client params, which don't fit the
                                    # KB-per-client population regime)
+    telemetry: Optional[object] = None  # repro.obs.TelemetryConfig — JSONL
+                                   # round events + span tracing; health
+                                   # scalars ride the supervised (shepherd)
+                                   # body only (the PPO body is a follow-on)
 
 
 def _method_settings(cfg: PFITConfig):
@@ -249,6 +256,14 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
     ledger = CommLedger()
     reward_curve = []
 
+    # ---- observability (repro.obs): health scalars ride the supervised
+    # (shepherd) fused body only — the PPO body is a documented follow-on
+    tele_cfg = cfg.telemetry
+    tracer = SpanTracer(enabled=bool(tele_cfg and tele_cfg.trace))
+    tele = RunTelemetry(tele_cfg.out_dir if tele_cfg else None, tracer=tracer)
+    health = (bool(tele_cfg and tele_cfg.health) and cfg.engine
+              and cfg.method == "shepherd")
+
     # ---- straggler-tolerant runtime: one fault trace + staleness tracker
     # shared by the engine and the legacy loop (core/robust.py)
     dl = cfg.deadline if (cfg.deadline is not None
@@ -333,6 +348,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                                                 robust=robust,
                                                 min_quorum=(dl.min_quorum
                                                             if dl else 0),
+                                                health=health,
                                                 **mesh_kw)
             cohort_tr = _shard(trees.stack(pad([cl["lora"]
                                                 for cl in clients])))
@@ -416,6 +432,12 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 "n_delivered": int(rplan.n_delivered),
                 "corrupt": int(np.asarray(rplan.corrupt).sum())}
 
+    tele.start({"mode": "cohort", "method": cfg.method,
+                "n_clients": cfg.n_clients, "rounds": cfg.rounds,
+                "engine": bool(use_engine), "codec": cfg.uplink_codec})
+    profiling = bool(tele_cfg and tele_cfg.jax_profile) and jax_profile_start(
+        os.path.join(tele_cfg.out_dir, "jax_profile"))
+
     for rnd in range(cfg.rounds):
         gains = channel.realize(cfg.n_clients)
         rplan = None
@@ -426,6 +448,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                                         gains=gains, fresh_bits=est_bits)
         rnd_key = jax.random.fold_in(codec_key, rnd)
         reports = []
+        hstats = None
         ontime = None
         if robust:
             # deadline mode hands the engine the pre-deadline weights plus
@@ -456,69 +479,89 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                     return {"tokens": s["tokens"][:, :-1],
                             "labels": s["tokens"][:, 1:],
                             "mask": s["mask"][:, 1:]}
-                batches = stacker(pad(
-                    [[shepherd_batch(ci) for _ in range(cfg.shepherd_steps)]
-                     for ci in range(cfg.n_clients)]))
+                with tracer.span("gather"):
+                    batches = stacker(pad(
+                        [[shepherd_batch(ci)
+                          for _ in range(cfg.shepherd_steps)]
+                         for ci in range(cfg.n_clients)]))
                 if robust and codec is None:
-                    cohort_tr, cohort_opt, pending, _ = round_step(
-                        cohort_tr, cohort_opt, pending, batches, *margs)
+                    with tracer.span("device-step"):
+                        outs = round_step(
+                            cohort_tr, cohort_opt, pending, batches, *margs)
+                    cohort_tr, cohort_opt, pending = outs[:3]
                     bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
                 elif robust:
-                    cohort_tr, cohort_opt, pending, _, eng_bits = round_step(
-                        cohort_tr, cohort_opt, pending, batches, *margs, ck)
+                    with tracer.span("device-step"):
+                        outs = round_step(cohort_tr, cohort_opt, pending,
+                                          batches, *margs, ck)
+                    cohort_tr, cohort_opt, pending = outs[:3]
                     bits = [float(b)
-                            for b in np.asarray(eng_bits)[:cfg.n_clients]]
+                            for b in np.asarray(outs[4])[:cfg.n_clients]]
                 elif codec is None:
-                    cohort_tr, cohort_opt, _ = round_step(
-                        cohort_tr, cohort_opt, batches, weights)
+                    with tracer.span("device-step"):
+                        outs = round_step(
+                            cohort_tr, cohort_opt, batches, weights)
+                    cohort_tr, cohort_opt = outs[:2]
                     bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
                 else:
-                    cohort_tr, cohort_opt, _, eng_bits = round_step(
-                        cohort_tr, cohort_opt, batches, weights, ck)
+                    with tracer.span("device-step"):
+                        outs = round_step(
+                            cohort_tr, cohort_opt, batches, weights, ck)
+                    cohort_tr, cohort_opt = outs[:2]
                     bits = [float(b)
-                            for b in np.asarray(eng_bits)[:cfg.n_clients]]
+                            for b in np.asarray(outs[3])[:cfg.n_clients]]
+                if health:
+                    hstats = outs[-1]
                 for cl, lo in zip(clients,
                                   trees.unstack(cohort_tr, cfg.n_clients)):
                     cl["lora"] = lo
             else:
-                prompts = _shard(jnp.asarray(np.stack(pad(
-                    [corpus.sample(cfg.rollout_batch,
-                                   topic_probs=topic_prefs[ci],
-                                   rng=rng)["tokens"][:, :cfg.prompt_len]
-                     for ci in range(cfg.n_clients)]))))
-                keys = _shard(jnp.stack(pad(
-                    [jax.random.fold_in(key, rnd * 17 + ci)
-                     for ci in range(cfg.n_clients)])))
+                with tracer.span("gather"):
+                    prompts = _shard(jnp.asarray(np.stack(pad(
+                        [corpus.sample(cfg.rollout_batch,
+                                       topic_probs=topic_prefs[ci],
+                                       rng=rng)["tokens"][:, :cfg.prompt_len]
+                         for ci in range(cfg.n_clients)]))))
+                    keys = _shard(jnp.stack(pad(
+                        [jax.random.fold_in(key, rnd * 17 + ci)
+                         for ci in range(cfg.n_clients)])))
                 if robust and codec is None:
-                    (cohort_tr, cohort_opt, global_params, pending, _,
-                     _) = ppo_round_step(cohort_tr, cohort_opt, global_params,
-                                         pending, st_masks, prompts, keys,
-                                         alphas_h, alphas_s, weights,
-                                         _vec(rplan.train, 1.0),
-                                         _vec(rplan.recv, 1.0),
-                                         _vec(rplan.rejoin, 0.0),
-                                         _vec(ontime, 1.0))
+                    with tracer.span("device-step"):
+                        (cohort_tr, cohort_opt, global_params, pending, _,
+                         _) = ppo_round_step(cohort_tr, cohort_opt,
+                                             global_params, pending, st_masks,
+                                             prompts, keys, alphas_h,
+                                             alphas_s, weights,
+                                             _vec(rplan.train, 1.0),
+                                             _vec(rplan.recv, 1.0),
+                                             _vec(rplan.rejoin, 0.0),
+                                             _vec(ontime, 1.0))
                     bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
                 elif robust:
-                    (cohort_tr, cohort_opt, global_params, pending, _, _,
-                     eng_bits) = ppo_round_step(
-                        cohort_tr, cohort_opt, global_params, pending,
-                        st_masks, prompts, keys, alphas_h, alphas_s, weights,
-                        _vec(rplan.train, 1.0), _vec(rplan.recv, 1.0),
-                        _vec(rplan.rejoin, 0.0), _vec(ontime, 1.0), ck)
+                    with tracer.span("device-step"):
+                        (cohort_tr, cohort_opt, global_params, pending, _, _,
+                         eng_bits) = ppo_round_step(
+                            cohort_tr, cohort_opt, global_params, pending,
+                            st_masks, prompts, keys, alphas_h, alphas_s,
+                            weights, _vec(rplan.train, 1.0),
+                            _vec(rplan.recv, 1.0), _vec(rplan.rejoin, 0.0),
+                            _vec(ontime, 1.0), ck)
                     bits = [float(b)
                             for b in np.asarray(eng_bits)[:cfg.n_clients]]
                 elif codec is None:
-                    (cohort_tr, cohort_opt, global_params, _,
-                     _) = ppo_round_step(cohort_tr, cohort_opt, global_params,
-                                         st_masks, prompts, keys, alphas_h,
-                                         alphas_s, weights)
+                    with tracer.span("device-step"):
+                        (cohort_tr, cohort_opt, global_params, _,
+                         _) = ppo_round_step(cohort_tr, cohort_opt,
+                                             global_params, st_masks, prompts,
+                                             keys, alphas_h, alphas_s,
+                                             weights)
                     bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
                 else:
-                    (cohort_tr, cohort_opt, global_params, _, _,
-                     eng_bits) = ppo_round_step(
-                        cohort_tr, cohort_opt, global_params, st_masks,
-                        prompts, keys, alphas_h, alphas_s, weights, ck)
+                    with tracer.span("device-step"):
+                        (cohort_tr, cohort_opt, global_params, _, _,
+                         eng_bits) = ppo_round_step(
+                            cohort_tr, cohort_opt, global_params, st_masks,
+                            prompts, keys, alphas_h, alphas_s, weights, ck)
                     bits = [float(b)
                             for b in np.asarray(eng_bits)[:cfg.n_clients]]
                 for cl, p in zip(clients,
@@ -532,7 +575,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 extra = _round_extra(rplan, fresh)
             else:
                 reports = budget.round_reports(bits, gains)
-            ledger.log_round(reports, extra)
+            ledger.log_round(reports, extra, round_id=rnd)
             # (aggregation + broadcast already fused into the round step)
         else:
             fresh = np.zeros(cfg.n_clients, np.float64)
@@ -607,7 +650,7 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                 charged = tracker.end_round(rplan, fresh)
                 reports = _round_reports(rplan, charged, gains)
                 extra = _round_extra(rplan, fresh)
-            ledger.log_round(reports, extra)
+            ledger.log_round(reports, extra, round_id=rnd)
 
             def upload(ci, kind):
                 if codec is not None:
@@ -673,22 +716,40 @@ def run_pfit(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                                 jnp.broadcast_to(m, loc.shape) > 0, glob, loc),
                             cl["params"], global_params, client_masks[ci])
 
-        if cfg.method == "shepherd":
-            if cfg.factored:   # serve unmerged: base broadcast, factors tiny
-                reward_curve.append(eval_reward(
-                    [global_params] * cfg.n_clients,
-                    loras=[cl["lora"] for cl in clients]))
+        with tracer.span("eval"):
+            if cfg.method == "shepherd":
+                if cfg.factored:   # serve unmerged: base broadcast, tiny factors
+                    reward_curve.append(eval_reward(
+                        [global_params] * cfg.n_clients,
+                        loras=[cl["lora"] for cl in clients]))
+                else:
+                    reward_curve.append(eval_reward(
+                        [peft_mod.merge_lora(global_params,
+                                             clients[ci]["lora"], peft_cfg)
+                         for ci in range(cfg.n_clients)]))
             else:
-                reward_curve.append(eval_reward(
-                    [peft_mod.merge_lora(global_params, clients[ci]["lora"],
-                                         peft_cfg)
-                     for ci in range(cfg.n_clients)]))
-        else:
-            reward_curve.append(eval_reward([cl["params"] for cl in clients]))
+                reward_curve.append(
+                    eval_reward([cl["params"] for cl in clients]))
+        if tele.enabled:
+            if rnd == 0:
+                tele.compile_event(rnd,
+                                   tracer.totals().get("device-step", 0.0))
+            tele.round_event(rnd, {
+                "reward": reward_curve[-1],
+                "cohort": None,
+                "comm": {k: v for k, v in ledger.rounds[-1].items()
+                         if k != "per_client"},
+                "staleness": tracker.counters() if robust else None,
+                "health": None if hstats is None
+                else {k: float(v) for k, v in hstats.items()},
+            }, wall={"phases": tracer.pop_round()})
         if cfg.verbose:
             print(f"[pfit:{cfg.method}] round {rnd} reward "
                   f"{reward_curve[-1]:.4f} bytes {ledger.rounds[-1]['bytes']:,}")
 
+    if profiling:
+        jax_profile_stop()
+    tele.close()
     return {
         "method": cfg.method,
         "reward_per_round": reward_curve,
@@ -804,13 +865,19 @@ def _run_pfit_population(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
         upd, opt_state = opt.update(g, opt_state, lora)
         return trees.tree_add(lora, upd), opt_state, loss
 
+    tele_cfg = cfg.telemetry
+    tracer = SpanTracer(enabled=bool(tele_cfg and tele_cfg.trace))
+    tele = RunTelemetry(tele_cfg.out_dir if tele_cfg else None, tracer=tracer)
+    health = bool(tele_cfg and tele_cfg.health)
+
     cs = cohort_sharding(mesh, K, client_axes) if mesh is not None else None
     round_step = build_supervised_round(
         shepherd_local_step,
         mesh=cs.mesh if cs is not None else None,
         client_axes=cs.axes if cs is not None else None,
         codec=codec, factored_agg=cfg.factored_agg, robust=True,
-        min_quorum=(dl.min_quorum if dl is not None else 0))
+        min_quorum=(dl.min_quorum if dl is not None else 0),
+        health=health)
     stacker = HostBatchStacker(sharding=cs.named if cs is not None else None)
 
     runner = PopulationRunner(
@@ -819,7 +886,8 @@ def _run_pfit_population(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
         ledger=ledger, tracker=tracker, trace=trace, strace=strace,
         sampler=ClientSampler(pop.sampler, N, K,
                               seed=cfg.seed + 1000 * pop.seed),
-        arrivals=arrivals, dl=dl, cs=cs, est_bits=est_bits)
+        arrivals=arrivals, dl=dl, cs=cs, est_bits=est_bits,
+        tracer=tracer, health=health)
 
     def _lm_batch(b):
         return {"tokens": b["tokens"][:, :-1], "labels": b["tokens"][:, 1:],
@@ -867,6 +935,12 @@ def _run_pfit_population(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                              _put(e_mask))
         return [float(l) for l in np.asarray(losses)[:len(ids)]]
 
+    tele.start({"mode": "population", "method": cfg.method,
+                "population": N, "cohort_size": K, "rounds": cfg.rounds,
+                "sampler": pop.sampler, "codec": cfg.uplink_codec})
+    profiling = bool(tele_cfg and tele_cfg.jax_profile) and jax_profile_start(
+        os.path.join(tele_cfg.out_dir, "jax_profile"))
+
     loss_per_round: List[float] = []
     for rnd in range(cfg.rounds):
         out = runner.run_round(rnd, round_step=round_step, stacker=stacker,
@@ -874,12 +948,28 @@ def _run_pfit_population(cfg: PFITConfig, mesh=None, client_axes=None) -> Dict:
                                local_steps=cfg.shepherd_steps,
                                payload_bits=payload_bits,
                                codec_key=codec_key)
-        loss_per_round.append(
-            float(np.mean(eval_ids(out["cohort_tr"], out["ids"]))))
+        with tracer.span("eval"):
+            loss_per_round.append(
+                float(np.mean(eval_ids(out["cohort_tr"], out["ids"]))))
+        if tele.enabled:
+            if rnd == 0:
+                tele.compile_event(rnd,
+                                   tracer.totals().get("device-step", 0.0))
+            tele.round_event(rnd, {
+                "eval_loss": loss_per_round[-1],
+                "cohort": [int(i) for i in out["ids"]],
+                "comm": {k: v for k, v in ledger.rounds[-1].items()
+                         if k != "per_client"},
+                "staleness": tracker.counters(),
+                "health": out["health"],
+            }, wall={"phases": tracer.pop_round()})
         if cfg.verbose:
             print(f"[pfit-pop:shepherd] round {rnd} "
                   f"cohort lm-loss {loss_per_round[-1]:.4f}")
 
+    if profiling:
+        jax_profile_stop()
+    tele.close()
     return {
         "method": cfg.method,
         "eval_loss_per_round": loss_per_round,

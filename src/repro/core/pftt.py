@@ -76,6 +76,8 @@ from repro.data.pipeline import batch_iterator
 from repro.data.synthetic import ClassificationCorpus
 from repro.models import Model
 from repro.models import peft as peft_mod
+from repro.obs.metrics import RunTelemetry
+from repro.obs.trace import SpanTracer, jax_profile_start, jax_profile_stop
 from repro.optim import adamw
 from repro.sharding import MeshCtx, cohort_sharding
 from repro.wireless import (ArrivalModel, CommLedger, DeadlineConfig,
@@ -137,6 +139,10 @@ class PFTTConfig:
                                    # round samples a cohort_size cohort
                                    # (fused body unchanged; see
                                    # _run_pftt_population)
+    telemetry: Optional[object] = None  # repro.obs.TelemetryConfig — JSONL
+                                   # round-event stream + host span tracing
+                                   # + on-device health scalars (None = off;
+                                   # see docs/observability.md)
 
 
 def _upload_pred(method: str):
@@ -363,6 +369,15 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
     upload_pred = _upload_pred(cfg.method)
     accs_per_round = []
 
+    # ---- observability (repro.obs): JSONL round events + host span tracer
+    # (a disabled tracer still times, it just records nothing) + on-device
+    # health scalars riding the fused round outputs (engine path only —
+    # they live inside the compiled body, so dispatches/round stays 1)
+    tele_cfg = cfg.telemetry
+    tracer = SpanTracer(enabled=bool(tele_cfg and tele_cfg.trace))
+    tele = RunTelemetry(tele_cfg.out_dir if tele_cfg else None, tracer=tracer)
+    health = bool(tele_cfg and tele_cfg.health) and cfg.engine
+
     # ---- straggler-tolerant runtime (core/robust.py + wireless/faults.py):
     # the fault trace and the staleness tracker are shared verbatim by the
     # engine and the legacy loop, so both paths see identical weights/charges.
@@ -405,7 +420,8 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
             mesh=cs.mesh if cs is not None else None,
             client_axes=cs.axes if cs is not None else None,
             codec=codec, factored_agg=cfg.factored_agg, robust=robust,
-            min_quorum=(dl.min_quorum if dl is not None else 0))
+            min_quorum=(dl.min_quorum if dl is not None else 0),
+            health=health)
         pad = cs.pad if cs is not None else (lambda xs: xs)
         cohort_tr = trees.stack(pad([cl["trainable"] for cl in clients]))
         cohort_opt = trees.stack(pad([cl["opt_state"] for cl in clients]))
@@ -495,6 +511,16 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                     for _s in range(cfg.local_steps):
                         next(client_iters[ci])
 
+    run_meta = {"mode": "cohort", "method": cfg.method,
+                "n_clients": cfg.n_clients, "rounds": cfg.rounds,
+                "engine": bool(use_engine), "codec": cfg.uplink_codec}
+    if start_round > 0:
+        tele.resume(start_round, run_meta)
+    else:
+        tele.start(run_meta)
+    profiling = bool(tele_cfg and tele_cfg.jax_profile) and jax_profile_start(
+        os.path.join(tele_cfg.out_dir, "jax_profile"))
+
     for rnd in range(start_round, cfg.rounds):
         gains = channel.realize(cfg.n_clients)
         rplan = None
@@ -505,15 +531,18 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                                         gains=gains, fresh_bits=est_bits)
         rnd_key = jax.random.fold_in(codec_key, rnd)
         reports = []
+        hstats = None
         if use_engine:
             # host side: draw the round's batches in the legacy (client,
             # step) order into the preallocated stacked buffer, one
             # (per-shard when meshed) device_put, and run ONE compiled
             # round step; ghost clients reuse client 0's batches and get
             # zero aggregation weight
-            batches = stacker(pad(
-                [[next(client_iters[ci]) for _ in range(cfg.local_steps)]
-                 for ci in range(cfg.n_clients)]))
+            with tracer.span("gather"):
+                batches = stacker(pad(
+                    [[next(client_iters[ci])
+                      for _ in range(cfg.local_steps)]
+                     for ci in range(cfg.n_clients)]))
             # deadline mode hands the engine the pre-deadline weights plus
             # the on-time mask; their product (applied in the fused body)
             # is the pre-quorum agg_w, and the body re-derives the quorum
@@ -524,11 +553,12 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                 if cs is not None else jnp.asarray(w)
             ck = None
             if codec is not None:
-                ck = jnp.stack(pad(
-                    [jax.random.fold_in(rnd_key, ci)
-                     for ci in range(cfg.n_clients)]))
-                if cs is not None:
-                    ck = jax.device_put(ck, cs.named)
+                with tracer.span("encode"):
+                    ck = jnp.stack(pad(
+                        [jax.random.fold_in(rnd_key, ci)
+                         for ci in range(cfg.n_clients)]))
+                    if cs is not None:
+                        ck = jax.device_put(ck, cs.named)
             if robust:
                 # ghosts train + receive like real clients (as in the sync
                 # engine) but never rejoin and carry zero agg weight
@@ -538,25 +568,40 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                          _vec(rplan.recv, 1.0), _vec(rplan.rejoin, 0.0),
                          _vec(ontime, 1.0))
                 if codec is None:
-                    cohort_tr, cohort_opt, pending, _ = round_step(
-                        cohort_tr, cohort_opt, pending, batches, *margs)
+                    with tracer.span("device-step"):
+                        outs = round_step(
+                            cohort_tr, cohort_opt, pending, batches, *margs)
+                    cohort_tr, cohort_opt, pending = outs[:3]
                     fresh = np.asarray([payloads[ci] * 8
                                         for ci in range(cfg.n_clients)])
                 else:
-                    cohort_tr, cohort_opt, pending, _, eng_bits = round_step(
-                        cohort_tr, cohort_opt, pending, batches, *margs, ck)
+                    with tracer.span("device-step"):
+                        outs = round_step(cohort_tr, cohort_opt, pending,
+                                          batches, *margs, ck)
+                    cohort_tr, cohort_opt, pending = outs[:3]
+                    eng_bits = outs[4]
                     fresh = (np.asarray(eng_bits, np.float64)[:cfg.n_clients]
                              + act_bits())
+                if health:
+                    hstats = outs[-1]
                 charged = tracker.end_round(rplan, fresh)
                 reports = _round_reports(rplan, charged, gains)
             elif codec is None:
-                cohort_tr, cohort_opt, _ = round_step(cohort_tr, cohort_opt,
-                                                      batches, weights)
+                with tracer.span("device-step"):
+                    outs = round_step(cohort_tr, cohort_opt, batches,
+                                      weights)
+                cohort_tr, cohort_opt = outs[:2]
+                if health:
+                    hstats = outs[-1]
                 bits = [payloads[ci] * 8 for ci in range(cfg.n_clients)]
                 reports = budget.round_reports(bits, gains)
             else:
-                cohort_tr, cohort_opt, _, eng_bits = round_step(
-                    cohort_tr, cohort_opt, batches, weights, ck)
+                with tracer.span("device-step"):
+                    outs = round_step(cohort_tr, cohort_opt, batches,
+                                      weights, ck)
+                cohort_tr, cohort_opt, eng_bits = outs[0], outs[1], outs[3]
+                if health:
+                    hstats = outs[-1]
                 bits = [float(b) + act_bits()
                         for b in np.asarray(eng_bits)[:cfg.n_clients]]
                 reports = budget.round_reports(bits, gains)
@@ -598,7 +643,7 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
             if codec is not None:   # realized encoded size becomes the next
                 est_bits = np.where(  # scheduling estimate
                     np.asarray(rplan.train) > 0, fresh, est_bits)
-        ledger.log_round(reports, extra)
+        ledger.log_round(reports, extra, round_id=rnd)
 
         # --- aggregation over surviving clients (partial for pftt); in the
         # engine path this already happened inside the fused round step.
@@ -640,24 +685,43 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                 for cl in clients:
                     cl["trainable"] = trees.merge(cl["trainable"], agg)
 
-        accs = eval_round_accs(
-            cohort_tr if use_engine
-            else trees.stack([cl["trainable"] for cl in clients]))
+        with tracer.span("eval"):
+            accs = eval_round_accs(
+                cohort_tr if use_engine
+                else trees.stack([cl["trainable"] for cl in clients]))
         accs_per_round.append(float(np.mean(accs)))
+        # round event BEFORE the checkpoint (the exactly-once contract:
+        # a kill between them re-records the round on resume; a kill after
+        # the checkpoint keeps it — resume() drops rounds >= next_round)
+        if tele.enabled:
+            if rnd == start_round:  # first dispatch of this process paid
+                tele.compile_event(  # XLA compilation inside device-step
+                    rnd, tracer.totals().get("device-step", 0.0))
+            tele.round_event(rnd, {
+                "acc": accs_per_round[-1],
+                "cohort": None,   # cohort mode: every client, every round
+                "comm": {k: v for k, v in ledger.rounds[-1].items()
+                         if k != "per_client"},
+                "staleness": tracker.counters() if robust else None,
+                "health": None if hstats is None else
+                {k: float(v) for k, v in hstats.items()},
+            }, wall={"phases": tracer.pop_round()})
         if ckpt_file is not None:   # round-level checkpoint (kill-safe)
-            state = {"trainable": cohort_tr, "opt": cohort_opt}
-            if robust:
-                state["pending"] = pending
-            save_checkpoint(ckpt_file, state)
-            meta = {"next_round": rnd + 1,
-                    "accs_per_round": accs_per_round,
-                    "ledger_rounds": ledger.rounds}
-            if robust:
-                meta["tracker"] = tracker.state_dict()
-                if dl is not None:
-                    meta["est_bits"] = [float(b) for b in est_bits]
-            with open(meta_file, "w") as f:
-                json.dump(meta, f)
+            with tracer.span("checkpoint"):
+                state = {"trainable": cohort_tr, "opt": cohort_opt}
+                if robust:
+                    state["pending"] = pending
+                save_checkpoint(ckpt_file, state)
+                meta = {"next_round": rnd + 1,
+                        "accs_per_round": accs_per_round,
+                        "ledger_rounds": ledger.rounds}
+                if robust:
+                    meta["tracker"] = tracker.state_dict()
+                    if dl is not None:
+                        meta["est_bits"] = [float(b) for b in est_bits]
+                with open(meta_file, "w") as f:
+                    json.dump(meta, f)
+            tele.checkpoint(rnd)
         if cfg.verbose and rnd % 5 == 0:
             print(f"[pftt:{cfg.method}] round {rnd} acc {accs_per_round[-1]:.3f} "
                   f"bytes {ledger.rounds[-1]['bytes']:,} "
@@ -666,6 +730,10 @@ def run_pftt(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
     if use_engine:   # sync the per-client dicts once, after the last round
         for cl, tr in zip(clients, trees.unstack(cohort_tr, cfg.n_clients)):
             cl["trainable"] = tr
+
+    if profiling:
+        jax_profile_stop()
+    tele.close()
 
     return {
         "method": cfg.method,
@@ -785,13 +853,21 @@ def _run_pftt_population(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         upd, opt_state = opt.update(g, opt_state, trainable)
         return trees.tree_add(trainable, upd), opt_state, loss
 
+    # ---- observability: the runner owns the spans (its "round" span is
+    # the round_s/host_s accounting); health scalars ride the fused body
+    tele_cfg = cfg.telemetry
+    tracer = SpanTracer(enabled=bool(tele_cfg and tele_cfg.trace))
+    tele = RunTelemetry(tele_cfg.out_dir if tele_cfg else None, tracer=tracer)
+    health = bool(tele_cfg and tele_cfg.health)
+
     cs = cohort_sharding(mesh, K, client_axes) if mesh is not None else None
     round_step = build_supervised_round(
         local_step, upload_pred,
         mesh=cs.mesh if cs is not None else None,
         client_axes=cs.axes if cs is not None else None,
         codec=codec, factored_agg=cfg.factored_agg, robust=True,
-        min_quorum=(dl.min_quorum if dl is not None else 0))
+        min_quorum=(dl.min_quorum if dl is not None else 0),
+        health=health)
     stacker = HostBatchStacker(sharding=cs.named if cs is not None else None)
 
     runner = PopulationRunner(
@@ -800,7 +876,8 @@ def _run_pftt_population(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         ledger=ledger, tracker=tracker, trace=trace, strace=strace,
         sampler=ClientSampler(pop.sampler, N, K,
                               seed=cfg.seed + 1000 * pop.seed),
-        arrivals=arrivals, dl=dl, cs=cs, est_bits=est_bits, act_bits=ab)
+        arrivals=arrivals, dl=dl, cs=cs, est_bits=est_bits, act_bits=ab,
+        tracer=tracer, health=health)
 
     # ---- cohort eval: the sampled clients' held-out draws refill one
     # preallocated buffer and score in ONE fused dispatch per round
@@ -862,27 +939,58 @@ def _run_pftt_population(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
                 load_checkpoint(ckpt_file, runner.checkpoint_tree()))
             runner.burn_rounds(start_round)
 
+    run_meta = {"mode": "population", "method": cfg.method,
+                "population": N, "cohort": K, "rounds": cfg.rounds,
+                "sampler": pop.sampler, "codec": cfg.uplink_codec}
+    if start_round > 0:
+        tele.resume(start_round, run_meta)
+    else:
+        tele.start(run_meta)
+    profiling = bool(tele_cfg and tele_cfg.jax_profile) and jax_profile_start(
+        os.path.join(tele_cfg.out_dir, "jax_profile"))
+
     for rnd in range(start_round, cfg.rounds):
         out = runner.run_round(rnd, round_step=round_step, stacker=stacker,
                                draw_batches=draw,
                                local_steps=cfg.local_steps,
                                payload_bits=payload_bits,
                                codec_key=codec_key)
-        accs = eval_ids(out["cohort_tr"], out["ids"])
+        with tracer.span("eval"):
+            accs = eval_ids(out["cohort_tr"], out["ids"])
         accs_per_round.append(float(np.mean(accs)) if accs else 0.0)
+        # round event BEFORE the checkpoint — see run_pftt (the same
+        # exactly-once resume ordering)
+        if tele.enabled:
+            if rnd == start_round:
+                tele.compile_event(
+                    rnd, tracer.totals().get("device-step", 0.0))
+            tele.round_event(rnd, {
+                "acc": accs_per_round[-1],
+                "cohort": [int(i) for i in out["ids"]],
+                "comm": {k: v for k, v in ledger.rounds[-1].items()
+                         if k != "per_client"},
+                "staleness": tracker.counters(),
+                "health": out["health"],
+            }, wall={"phases": tracer.pop_round()})
         if ckpt_file is not None:
-            save_checkpoint(ckpt_file, runner.checkpoint_tree())
-            meta = {"next_round": rnd + 1,
-                    "accs_per_round": accs_per_round,
-                    "ledger_rounds": ledger.rounds,
-                    "runner": runner.state_dict()}
-            with open(meta_file, "w") as f:
-                json.dump(meta, f)
+            with tracer.span("checkpoint"):
+                save_checkpoint(ckpt_file, runner.checkpoint_tree())
+                meta = {"next_round": rnd + 1,
+                        "accs_per_round": accs_per_round,
+                        "ledger_rounds": ledger.rounds,
+                        "runner": runner.state_dict()}
+                with open(meta_file, "w") as f:
+                    json.dump(meta, f)
+            tele.checkpoint(rnd)
         if cfg.verbose and rnd % 5 == 0:
             print(f"[pftt-pop:{cfg.method}] round {rnd} "
                   f"cohort acc {accs_per_round[-1]:.3f} "
                   f"sampled {sorted(int(i) for i in out['ids'])[:8]}… "
                   f"host {runner.host_overhead_frac:.1%}")
+
+    if profiling:
+        jax_profile_stop()
+    tele.close()
 
     return {
         "method": cfg.method,
@@ -905,5 +1013,6 @@ def _run_pftt_population(cfg: PFTTConfig, mesh=None, client_axes=None) -> Dict:
         "host_overhead_frac": runner.host_overhead_frac,
         "host_s": runner.host_s,
         "round_s": runner.round_s,
+        "round_wall": list(runner.round_wall),
         "store_bytes": store.nbytes(),
     }

@@ -148,6 +148,7 @@ class StalenessTracker:
         self.now_s = 0.0                               # simulated clock
         self.quorum_noops = 0                          # voided rounds
         self.abandoned = 0                             # payloads given up
+        self.retransmissions = 0                       # buffered re-sends
 
     def begin_round(self, faults: RoundFaults, outage_w: np.ndarray, *,
                     gains: Optional[np.ndarray] = None,
@@ -174,6 +175,7 @@ class StalenessTracker:
             corrupt = np.zeros(len(self.valid), bool) \
                 if faults.corrupt is None else (faults.corrupt > 0)
             corrupt = corrupt & attempt
+            self.retransmissions += int((attempt & ~train).sum())
             delivered = attempt & (np.asarray(outage_w) > 0) & ~corrupt
             staleness = np.where(train, 0, self.age)
             agg_w = np.where(delivered, self.cfg.discount(staleness), 0.0)
@@ -198,6 +200,7 @@ class StalenessTracker:
         ready = start_wait < dl.deadline_s
         has_payload = train | (self.valid & ready)
         attempt = (faults.tx > 0) & has_payload
+        self.retransmissions += int((attempt & ~train).sum())
         rates = self.arrivals.rates(gains)
         # drawn every round (fixed-size block → the RNG stream stays aligned
         # across the engine, the legacy loop, and checkpoint resume)
@@ -283,6 +286,14 @@ class StalenessTracker:
         self.next_try_s = np.where(rejoin, 0.0, self.next_try_s)
         return charged
 
+    def counters(self) -> Dict[str, int]:
+        """Telemetry snapshot: cumulative run counters + current buffer
+        occupancy (feeds the ``staleness`` block of each round event)."""
+        return {"pending": int(self.valid.sum()),
+                "abandoned": int(self.abandoned),
+                "retransmissions": int(self.retransmissions),
+                "quorum_noops": int(self.quorum_noops)}
+
     # ---- checkpoint/resume ------------------------------------------------
 
     def state_dict(self) -> Dict:
@@ -291,7 +302,8 @@ class StalenessTracker:
                 "fails": self.fails.tolist(),
                 "next_try_s": self.next_try_s.tolist(),
                 "now_s": self.now_s, "quorum_noops": self.quorum_noops,
-                "abandoned": self.abandoned}
+                "abandoned": self.abandoned,
+                "retransmissions": self.retransmissions}
 
     def load_state_dict(self, d: Dict) -> None:
         self.valid = np.asarray(d["valid"], np.int64).astype(bool)
@@ -304,3 +316,4 @@ class StalenessTracker:
         self.now_s = float(d.get("now_s", 0.0))
         self.quorum_noops = int(d.get("quorum_noops", 0))
         self.abandoned = int(d.get("abandoned", 0))
+        self.retransmissions = int(d.get("retransmissions", 0))

@@ -35,7 +35,6 @@ so a straggler's payload survives rounds it is not sampled in.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -43,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import trees
+from repro.obs.trace import SpanTracer
 from repro.wireless.scenarios import Scenario
 
 SAMPLER_KINDS = ("uniform", "availability")
@@ -334,7 +334,7 @@ class PopulationRunner:
                  global_shared, upload_pred, channel, budget, ledger,
                  tracker, trace, strace, sampler: ClientSampler,
                  arrivals=None, dl=None, cs=None, est_bits=None,
-                 act_bits: float = 0.0):
+                 act_bits: float = 0.0, tracer=None, health: bool = False):
         self.pop = pop
         self.N = pop.population
         self.K = pop.cohort_size
@@ -356,8 +356,17 @@ class PopulationRunner:
             np.asarray(est_bits, np.float64)
         self.act_bits = float(act_bits)
         self.needs_opt_reset = np.zeros(self.N, bool)
+        # the tracer owns all host timing (a disabled tracer still times);
+        # host_s/round_s keep their PR 9 meaning: sample+gather+scatter vs
+        # whole-round wall
+        self.tracer = tracer if tracer is not None else SpanTracer()
+        self.health = health              # round_step returns a trailing
+        #                                 # health-scalar dict (obs.health)
         self.host_s = 0.0                 # sample+gather+scatter time
         self.round_s = 0.0                # total round wall time
+        self.round_wall = []              # per-round wall (round_s addends):
+        #                                 # [0] holds the compile, [1:] are
+        #                                 # steady-state (obs overhead bench)
         self.seen = np.zeros(self.N, bool)  # ever-sampled coverage
 
     # ---- helpers -----------------------------------------------------------
@@ -402,110 +411,132 @@ class PopulationRunner:
         run-level codec PRNG key (per-round/per-CLIENT-ID keys are folded
         here, so a client's stochastic-rounding stream is stable no matter
         which cohorts it lands in)."""
-        t0 = time.perf_counter()
-        probs = self.strace.avail_probs(rnd) \
-            if self.sampler.kind == "availability" else None
-        ids = self.sampler.sample(probs)
-        self.seen[ids] = True
-        t1 = time.perf_counter()
+        tracer = self.tracer
+        with tracer.span("round") as sp_round:
+            with tracer.span("sample") as sp_sample:
+                probs = self.strace.avail_probs(rnd) \
+                    if self.sampler.kind == "availability" else None
+                ids = self.sampler.sample(probs)
+                self.seen[ids] = True
 
-        # population-wide plan: faults ∧ sampled ∧ realized availability
-        gains = self.channel.realize(self.N) * self.strace.gain_round(rnd)
-        rf = self.trace.round(rnd)
-        gains = gains * rf.gain_scale
-        s = np.zeros(self.N, np.float32)
-        s[ids] = 1.0
-        avail = self.strace.avail_round(rnd)
-        rf_pop = dataclasses.replace(
-            rf, train=rf.train * s * avail, tx=rf.tx * s * avail,
-            recv=rf.recv * s * avail, rejoin=rf.rejoin * s)
-        # a crash-rejoin on an unsampled round resets the optimizer the
-        # next time the client is gathered
-        self.needs_opt_reset |= (rf.rejoin > 0) & (s == 0)
-        rplan = self.tracker.begin_round(
-            rf_pop, self.channel.outage_weights(gains), gains=gains,
-            fresh_bits=self.est_bits)
+            with tracer.span("plan"):
+                # population-wide plan: faults ∧ sampled ∧ realized
+                # availability
+                gains = (self.channel.realize(self.N)
+                         * self.strace.gain_round(rnd))
+                rf = self.trace.round(rnd)
+                gains = gains * rf.gain_scale
+                s = np.zeros(self.N, np.float32)
+                s[ids] = 1.0
+                avail = self.strace.avail_round(rnd)
+                rf_pop = dataclasses.replace(
+                    rf, train=rf.train * s * avail, tx=rf.tx * s * avail,
+                    recv=rf.recv * s * avail, rejoin=rf.rejoin * s)
+                # a crash-rejoin on an unsampled round resets the optimizer
+                # the next time the client is gathered
+                self.needs_opt_reset |= (rf.rejoin > 0) & (s == 0)
+                rplan = self.tracker.begin_round(
+                    rf_pop, self.channel.outage_weights(gains), gains=gains,
+                    fresh_bits=self.est_bits)
 
-        t2 = time.perf_counter()
-        reset = ids[self.needs_opt_reset[ids]]
-        self.store.zero_rows("opt", reset)
-        self.needs_opt_reset[ids] = False
-        tr_h = self.store.gather("trainable", ids, pad_to=self.n_rows)
-        self._overlay_global(tr_h)
-        tr_d = self._put(tr_h)
-        opt_d = self._put(self.store.gather("opt", ids, pad_to=self.n_rows))
-        pend_d = self._put(self.store.gather("pending", ids,
-                                             pad_to=self.n_rows))
-        t3 = time.perf_counter()
+            with tracer.span("gather") as sp_gather:
+                reset = ids[self.needs_opt_reset[ids]]
+                self.store.zero_rows("opt", reset)
+                self.needs_opt_reset[ids] = False
+                tr_h = self.store.gather("trainable", ids,
+                                         pad_to=self.n_rows)
+                self._overlay_global(tr_h)
+                tr_d = self._put(tr_h)
+                opt_d = self._put(self.store.gather("opt", ids,
+                                                    pad_to=self.n_rows))
+                pend_d = self._put(self.store.gather("pending", ids,
+                                                     pad_to=self.n_rows))
 
-        rows = [draw_batches(int(c), rnd) for c in ids]
-        rows += [rows[0]] * (self.n_rows - self.K)   # ghost rows
-        batches = stacker(rows)
-        w = rplan.agg_w_pre if self.dl is not None else rplan.agg_w
-        ontime = rplan.ontime if self.dl is not None \
-            else np.ones(self.N, np.float32)
-        margs = (self._vec(rplan.train[ids], 1.0), self._vec(w[ids], 0.0),
-                 self._vec(rplan.recv[ids], 1.0),
-                 self._vec(rplan.rejoin[ids], 0.0),
-                 self._vec(ontime[ids], 1.0))
-        if codec_key is None:
-            tr_d, opt_d, pend_d, losses = round_step(
-                tr_d, opt_d, pend_d, batches, *margs)
-            fresh_c = np.full(self.K, (payload_bits or 0.0), np.float64)
-        else:
-            rk = jax.random.fold_in(codec_key, rnd)
-            ck = jnp.stack([jax.random.fold_in(rk, int(c)) for c in ids]
-                           + [jax.random.fold_in(rk, int(ids[0]))]
-                           * (self.n_rows - self.K))
-            tr_d, opt_d, pend_d, losses, bits = round_step(
-                tr_d, opt_d, pend_d, batches, *margs, self._put(ck))
-            fresh_c = (np.asarray(bits, np.float64)[:self.K]
-                       + self.act_bits)
-        jax.block_until_ready(tr_d)
+            # the batch draw rides inside the device-step window (as it did
+            # in the t0..t6 accounting: it is not host_s overhead)
+            hstats = None
+            with tracer.span("device-step"):
+                rows = [draw_batches(int(c), rnd) for c in ids]
+                rows += [rows[0]] * (self.n_rows - self.K)   # ghost rows
+                batches = stacker(rows)
+                w = rplan.agg_w_pre if self.dl is not None else rplan.agg_w
+                ontime = rplan.ontime if self.dl is not None \
+                    else np.ones(self.N, np.float32)
+                margs = (self._vec(rplan.train[ids], 1.0),
+                         self._vec(w[ids], 0.0),
+                         self._vec(rplan.recv[ids], 1.0),
+                         self._vec(rplan.rejoin[ids], 0.0),
+                         self._vec(ontime[ids], 1.0))
+                if codec_key is None:
+                    outs = round_step(tr_d, opt_d, pend_d, batches, *margs)
+                    tr_d, opt_d, pend_d, losses = outs[:4]
+                    if self.health:
+                        hstats = outs[4]
+                    fresh_c = np.full(self.K, (payload_bits or 0.0),
+                                      np.float64)
+                else:
+                    with tracer.span("encode"):
+                        rk = jax.random.fold_in(codec_key, rnd)
+                        ck = jnp.stack(
+                            [jax.random.fold_in(rk, int(c)) for c in ids]
+                            + [jax.random.fold_in(rk, int(ids[0]))]
+                            * (self.n_rows - self.K))
+                    outs = round_step(tr_d, opt_d, pend_d, batches, *margs,
+                                      self._put(ck))
+                    tr_d, opt_d, pend_d, losses, bits = outs[:5]
+                    if self.health:
+                        hstats = outs[5]
+                    fresh_c = (np.asarray(bits, np.float64)[:self.K]
+                               + self.act_bits)
+                jax.block_until_ready(tr_d)
 
-        t4 = time.perf_counter()
-        self.store.scatter("trainable", ids, tr_d)
-        self.store.scatter("opt", ids, opt_d)
-        self.store.scatter("pending", ids, pend_d)
-        # the merge gate is host-known: extract the new global from any
-        # cohort row that received the broadcast
-        gate = float(rplan.agg_w.sum()) > 0 and rplan.quorum_ok
-        if gate:
-            recv_rows = np.where(rplan.recv[ids] > 0)[0]
-            if len(recv_rows):
-                self.global_shared = self._snapshot_global(
-                    int(ids[recv_rows[0]]))
-        t5 = time.perf_counter()
+            with tracer.span("scatter") as sp_scatter:
+                self.store.scatter("trainable", ids, tr_d)
+                self.store.scatter("opt", ids, opt_d)
+                self.store.scatter("pending", ids, pend_d)
+                # the merge gate is host-known: extract the new global from
+                # any cohort row that received the broadcast
+                gate = float(rplan.agg_w.sum()) > 0 and rplan.quorum_ok
+                if gate:
+                    recv_rows = np.where(rplan.recv[ids] > 0)[0]
+                    if len(recv_rows):
+                        self.global_shared = self._snapshot_global(
+                            int(ids[recv_rows[0]]))
 
-        fresh_n = np.zeros(self.N, np.float64)
-        fresh_n[ids] = fresh_c
-        charged = self.tracker.end_round(rplan, fresh_n)
-        extra = None
-        if self.dl is not None:
-            extra = {"sim_dt_s": float(rplan.sim_dt_s),
-                     "quorum_noop": not rplan.quorum_ok,
-                     "n_delivered": int(rplan.n_delivered),
-                     "corrupt": int(np.asarray(rplan.corrupt).sum())}
-            if codec_key is not None:   # realized size → next estimate
-                self.est_bits = np.where(np.asarray(rplan.train) > 0,
-                                         fresh_n, self.est_bits)
-        att = np.where(np.asarray(rplan.attempt) > 0)[0]
-        if self.dl is None:
-            reports = [self.budget.report(charged[ci], gains[ci])
-                       for ci in att]
-        else:
-            reports = [self.budget.attempt_report(
-                charged[ci], gains[ci],
-                tx_time_s=float(rplan.tx_time_s[ci]),
-                arrival_s=float(rplan.arrival_s[ci]),
-                delivered=bool(rplan.delivered[ci] > 0)) for ci in att]
-        self.ledger.log_round(reports, extra)
-        t6 = time.perf_counter()
+            with tracer.span("ledger"):
+                fresh_n = np.zeros(self.N, np.float64)
+                fresh_n[ids] = fresh_c
+                charged = self.tracker.end_round(rplan, fresh_n)
+                extra = None
+                if self.dl is not None:
+                    extra = {"sim_dt_s": float(rplan.sim_dt_s),
+                             "quorum_noop": not rplan.quorum_ok,
+                             "n_delivered": int(rplan.n_delivered),
+                             "corrupt": int(np.asarray(rplan.corrupt).sum())}
+                    if codec_key is not None:  # realized size → next est.
+                        self.est_bits = np.where(
+                            np.asarray(rplan.train) > 0, fresh_n,
+                            self.est_bits)
+                att = np.where(np.asarray(rplan.attempt) > 0)[0]
+                if self.dl is None:
+                    reports = [self.budget.report(charged[ci], gains[ci])
+                               for ci in att]
+                else:
+                    reports = [self.budget.attempt_report(
+                        charged[ci], gains[ci],
+                        tx_time_s=float(rplan.tx_time_s[ci]),
+                        arrival_s=float(rplan.arrival_s[ci]),
+                        delivered=bool(rplan.delivered[ci] > 0))
+                        for ci in att]
+                self.ledger.log_round(reports, extra, round_id=rnd)
 
-        self.host_s += (t1 - t0) + (t3 - t2) + (t5 - t4)
-        self.round_s += t6 - t0
+        self.host_s += sp_sample.dur + sp_gather.dur + sp_scatter.dur
+        self.round_s += sp_round.dur
+        self.round_wall.append(sp_round.dur)
+        if hstats is not None:
+            hstats = {k: float(v) for k, v in hstats.items()}
         return {"ids": ids, "cohort_tr": tr_d, "losses": losses,
-                "plan": rplan}
+                "plan": rplan, "health": hstats}
 
     def burn_rounds(self, n: int) -> None:
         """Replay the host RNG draws of ``n`` skipped rounds on resume

@@ -128,6 +128,18 @@ def main():
                          "factored path — zero dense merges, one dispatch "
                          "per round, and (non-roberta archs) ≤1e-5 parity "
                          "vs the legacy dense-merge oracle")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="FL runs: write the structured run telemetry "
+                         "(events.jsonl — schema-versioned round metrics "
+                         "joining eval, comm ledger, staleness and health "
+                         "signals; repro.obs) into this directory")
+    ap.add_argument("--trace", action="store_true",
+                    help="with --telemetry-dir: also write trace.json, a "
+                         "Chrome trace-event file of the host round phases "
+                         "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--jax-profile", action="store_true",
+                    help="with --telemetry-dir: bracket the run in a "
+                         "jax.profiler trace under <dir>/jax_profile")
     ap.add_argument("--fl-seq", type=int, default=16,
                     help="arch FL round: per-sample sequence length")
     ap.add_argument("--fl-dmodel", type=int, default=64,
@@ -166,6 +178,12 @@ def main():
             print("fused path asserted: factored, one dispatch, "
                   "oracle parity OK")
         return
+    telemetry = None
+    if args.telemetry_dir:
+        from repro.obs import TelemetryConfig
+        telemetry = TelemetryConfig(out_dir=args.telemetry_dir,
+                                    trace=args.trace,
+                                    jax_profile=args.jax_profile)
     if args.fl_clients or args.population:
         import math
 
@@ -206,7 +224,7 @@ def main():
                          max_staleness=args.max_staleness,
                          deadline=deadline, population=population,
                          ckpt_dir=args.ckpt_dir, resume=args.resume,
-                         verbose=True)
+                         telemetry=telemetry, verbose=True)
         res = run_pftt(cfg, mesh=mesh, client_axes=("data",))
         print(f"sharded cohort over {n_dev} device(s): final acc "
               f"{res['final_acc']:.3f} mean round bytes "

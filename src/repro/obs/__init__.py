@@ -1,0 +1,15 @@
+"""Run observability: structured JSONL round telemetry, nested host span
+tracing (Chrome trace-event / Perfetto), and on-device training-health
+scalars that ride the fused round outputs.  See docs/observability.md.
+"""
+from repro.obs.metrics import (SCHEMA_VERSION, RunTelemetry, TelemetryConfig,
+                               canonical_stream, read_events, validate_events)
+from repro.obs.trace import (SpanTracer, jax_profile_start, jax_profile_stop)
+from repro.obs.health import HEALTH_KEYS, cohort_health, host_health
+
+__all__ = [
+    "SCHEMA_VERSION", "RunTelemetry", "TelemetryConfig",
+    "canonical_stream", "read_events", "validate_events",
+    "SpanTracer", "jax_profile_start", "jax_profile_stop",
+    "HEALTH_KEYS", "cohort_health", "host_health",
+]

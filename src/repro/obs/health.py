@@ -1,0 +1,167 @@
+"""On-device training-health scalars riding the fused round outputs.
+
+``cohort_health`` runs INSIDE the already-compiled robust/plain round
+bodies in ``core/cohort.py`` — a handful of reductions over arrays the
+body already holds — so enabling it keeps dispatches/round at exactly 1
+and never touches the factored path (zero dense merges).  Every value
+is a replicated f32 scalar (partial sums are ``psum``-ed across the
+client shards before normalization), safe to return with a replicated
+``P()`` out-spec.
+
+Signals (keys of the returned dict):
+
+    update_norm       L2 norm of the aggregated global update — the
+                      weighted FedAvg mean of per-client deltas
+                      (send − round-start upload subtree), gated to 0 on
+                      a void round.  Under ``factored_agg`` this is the
+                      plain stacked-mean norm, i.e. a monitor of the raw
+                      update mass, not of the rank-r re-projected
+                      broadcast.
+    client_norm_mean  mean over cohort rows of per-client delta L2 norm
+                      — the per-client "grad norm" proxy: the full
+                      local-steps round update, NOT a single micro-batch
+                      gradient (a true per-step grad norm would need a
+                      second output per scan step).  Ghost-padded rows
+                      (non-divisible shard cohorts duplicate client 0)
+                      are included in the mean/max.
+    client_norm_max   max over cohort rows of the same norm.
+    codec_err         L2 norm of (decoded − raw) upload across the
+                      cohort: the codec's reconstruction error this
+                      round; 0.0 when no codec.
+    agg_weight_sum    Σ effective aggregation weights (staleness decay ×
+                      on-time mask) — the "how much signal landed" dial.
+    delivered         count of cohort rows with weight > 0.
+    loss_mean         masked mean local training loss over
+                      (client, local-step).
+
+``host_health`` is the float64 numpy oracle the parity test compares
+against (single-shard inputs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HEALTH_KEYS = ("update_norm", "client_norm_mean", "client_norm_max",
+               "codec_err", "agg_weight_sum", "delivered", "loss_mean")
+
+
+def _psum(x, axis_names):
+    return jax.lax.psum(x, axis_names) if axis_names else x
+
+
+def _pmax(x, axis_names):
+    return jax.lax.pmax(x, axis_names) if axis_names else x
+
+
+def _leaf_sq(leaf):
+    """Per-client sum of squares: reduce every axis but the client axis."""
+    x = leaf.astype(jnp.float32)
+    return jnp.sum(x * x, axis=tuple(range(1, x.ndim)))
+
+
+def cohort_health(send, ref, losses, agg_w, gate, *,
+                  train_m=None, raw=None, decoded=None,
+                  axis_names: Optional[Sequence[str]] = None
+                  ) -> Dict[str, jnp.ndarray]:
+    """All args are the round body's locals: ``send``/``ref`` stacked
+    client trees (axis 0 = cohort row), ``losses`` (C, steps), ``agg_w``
+    (C,), ``gate`` scalar, ``raw``/``decoded`` the pre/post-codec upload
+    trees, ``axis_names`` the shard_map client axes (None off-mesh)."""
+    # trace-time import: core.cohort imports this module, so pulling
+    # aggregation at module scope would cycle through repro.core.__init__
+    from repro.core.aggregation import fedavg_stacked
+    an = tuple(axis_names) if axis_names else None
+    delta = jax.tree.map(lambda s, r: s.astype(jnp.float32) - r.astype(jnp.float32),
+                         send, ref)
+
+    # aggregated-update norm: fedavg_stacked already psums its partial
+    # sums under shard_map, so the mean tree is replicated — reduce local.
+    agg = fedavg_stacked(delta, agg_w, axis_names=an)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(agg))
+    update_norm = jnp.sqrt(sq) * gate.astype(jnp.float32)
+
+    # per-client delta norms (includes ghost-padded rows)
+    per_client_sq = sum(_leaf_sq(l) for l in jax.tree.leaves(delta))
+    norms = jnp.sqrt(per_client_sq)
+    n_local = jnp.float32(norms.shape[0])
+    client_norm_mean = _psum(norms.sum(), an) / jnp.maximum(_psum(n_local, an), 1.0)
+    client_norm_max = _pmax(norms.max(), an)
+
+    if raw is not None and decoded is not None:
+        err_sq = sum(_psum(jnp.sum(jnp.square(d.astype(jnp.float32)
+                                              - r.astype(jnp.float32))), an)
+                     for d, r in zip(jax.tree.leaves(decoded),
+                                     jax.tree.leaves(raw)))
+        codec_err = jnp.sqrt(err_sq)
+    else:
+        codec_err = jnp.float32(0.0)
+
+    agg_weight_sum = _psum(agg_w.astype(jnp.float32).sum(), an)
+    delivered = _psum((agg_w > 0).astype(jnp.float32).sum(), an)
+
+    tm = jnp.ones((losses.shape[0],), jnp.float32) if train_m is None else train_m
+    n_steps = jnp.float32(losses.shape[1]) if losses.ndim > 1 else jnp.float32(1.0)
+    loss_sum = _psum(losses.astype(jnp.float32).sum(), an)
+    loss_den = _psum(tm.astype(jnp.float32).sum(), an) * n_steps
+    loss_mean = loss_sum / jnp.maximum(loss_den, 1.0)
+
+    return {"update_norm": update_norm,
+            "client_norm_mean": client_norm_mean,
+            "client_norm_max": client_norm_max,
+            "codec_err": codec_err,
+            "agg_weight_sum": agg_weight_sum,
+            "delivered": delivered,
+            "loss_mean": loss_mean}
+
+
+# ---------------------------------------------------------------------------
+# float64 numpy oracle (parity test)
+# ---------------------------------------------------------------------------
+
+
+def host_health(send, ref, losses, agg_w, gate, *,
+                train_m=None, raw=None, decoded=None) -> Dict[str, float]:
+    """Single-shard numpy recomputation of ``cohort_health`` in float64."""
+    send_l = [np.asarray(l, np.float64) for l in jax.tree.leaves(send)]
+    ref_l = [np.asarray(l, np.float64) for l in jax.tree.leaves(ref)]
+    w = np.asarray(agg_w, np.float64)
+    losses = np.asarray(losses, np.float64)
+    deltas = [s - r for s, r in zip(send_l, ref_l)]
+
+    wsum = max(w.sum(), 1e-12)
+    sq = 0.0
+    for d in deltas:
+        mean = np.tensordot(w, d, axes=(0, 0)) / wsum
+        sq += float(np.sum(mean * mean))
+    update_norm = float(np.sqrt(sq)) * float(gate)
+
+    per_client = np.zeros(w.shape[0], np.float64)
+    for d in deltas:
+        per_client += d.reshape(d.shape[0], -1).__pow__(2).sum(axis=1)
+    norms = np.sqrt(per_client)
+
+    if raw is not None and decoded is not None:
+        err = 0.0
+        for dd, rr in zip(jax.tree.leaves(decoded), jax.tree.leaves(raw)):
+            diff = np.asarray(dd, np.float64) - np.asarray(rr, np.float64)
+            err += float(np.sum(diff * diff))
+        codec_err = float(np.sqrt(err))
+    else:
+        codec_err = 0.0
+
+    tm = np.ones(w.shape[0]) if train_m is None else np.asarray(train_m, np.float64)
+    n_steps = float(losses.shape[1]) if losses.ndim > 1 else 1.0
+    loss_mean = float(losses.sum()) / max(float(tm.sum()) * n_steps, 1.0)
+
+    return {"update_norm": update_norm,
+            "client_norm_mean": float(norms.mean()),
+            "client_norm_max": float(norms.max()),
+            "codec_err": codec_err,
+            "agg_weight_sum": float(w.sum()),
+            "delivered": float((w > 0).sum()),
+            "loss_mean": loss_mean}

@@ -58,11 +58,18 @@ class CommLedger:
     """Per-round, per-client record of upload traffic, delay and energy."""
     rounds: List[Dict] = dataclasses.field(default_factory=list)
 
-    def log_round(self, reports, extra=None):
+    def log_round(self, reports, extra=None, *, round_id=None):
         # an all-outage round has no completed upload: its delay is
         # undefined (NaN), not 0.0 — mean_round_delay skips it
         alive = [r.delay_s for r in reports if not r.outage]
         rec = {
+            # explicit join keys: record_id is the monotonic append index,
+            # round is the caller's round counter (defaults to record_id for
+            # callers without one) — downstream joins must not rely on list
+            # position across quorum-noop/void rounds
+            "record_id": len(self.rounds),
+            "round": int(round_id) if round_id is not None
+            else len(self.rounds),
             "bytes": sum(r.bytes_sent for r in reports),
             "delay_s": max(alive) if alive else float("nan"),
             "energy_j": sum(getattr(r, "energy_j", 0.0) for r in reports),
